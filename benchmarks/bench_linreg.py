@@ -1,0 +1,105 @@
+"""Paper Fig. 2: linear regression — loss vs (a) communication rounds,
+(b) transmitted bits, (c) consumed energy, for Q-GADMM / GADMM / GD / QGD /
+ADIANA.  Run with x64 for loss floors below 1e-4 (|F| ~ 1e4)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import gadmm  # noqa: E402
+from repro.core.baselines import PSProblem, run_adiana, run_gd  # noqa: E402
+from repro.core.quantizer import QuantizerConfig  # noqa: E402
+from repro.core.topology import random_placement  # noqa: E402
+from repro.core import comm_model as cm  # noqa: E402
+
+from .common import linreg_problem, rounds_to, run_gadmm_curve  # noqa: E402
+
+# The paper's 1e-4 ABSOLUTE threshold is specific to the California-housing
+# objective scale; our synthetic stand-in uses the scale-free equivalent:
+# |F - F*| <= 1e-5 * |F*|.
+REL_TARGET = 1e-4
+
+
+def run(n_workers=50, iters=600, rho=24.0, bits=2, seed=0, quick=False):
+    if quick:
+        n_workers, iters = 20, 300
+    xs, ys, xtx, xty, theta_star = linreg_problem(n_workers=n_workers,
+                                                  seed=seed)
+    d = xs.shape[-1]
+    prob = PSProblem(xtx=xtx, xty=xty)
+    fstar_vec = jnp.broadcast_to(theta_star, (1, d))
+
+    def ps_losses(thetas):
+        f = jax.vmap(prob.objective)(thetas)
+        fs = float(prob.objective(theta_star))
+        return np.abs(np.asarray(f) - fs)
+
+    curves, bits_per_round = {}, {}
+    g_losses, _ = run_gadmm_curve(
+        xs, ys, gadmm.GADMMConfig(rho=rho, quantize=False), iters, theta_star)
+    curves["GADMM"] = g_losses
+    bits_per_round["GADMM"] = gadmm.bits_per_round(
+        gadmm.GADMMConfig(rho=rho, quantize=False), n_workers, d)
+
+    for b_ in sorted({bits, 4}):
+        qcfg = gadmm.GADMMConfig(rho=rho, quantize=True,
+                                 qcfg=QuantizerConfig(bits=b_))
+        q_losses, _ = run_gadmm_curve(xs, ys, qcfg, iters, theta_star)
+        curves[f"Q-GADMM-{b_}b"] = q_losses
+        bits_per_round[f"Q-GADMM-{b_}b"] = gadmm.bits_per_round(
+            qcfg, n_workers, d)
+
+    thetas, b = run_gd(prob, iters)
+    curves["GD"] = ps_losses(thetas)
+    bits_per_round["GD"] = b
+    thetas, b = run_gd(prob, iters, quantize_bits=bits)
+    curves["QGD"] = ps_losses(thetas)
+    bits_per_round["QGD"] = b
+    ys_ad, b = run_adiana(prob, iters, bits=bits)
+    curves["ADIANA"] = ps_losses(ys_ad)
+    bits_per_round["ADIANA"] = b
+
+    # energy model (paper Sec. V-A)
+    placement = random_placement(n_workers, seed=seed)
+    radio = cm.RadioConfig(n_workers=n_workers)
+    bd = placement.broadcast_dist()
+    fstar = abs(float(prob.objective(theta_star)))
+    target = REL_TARGET * fstar
+    rows = []
+    for name, losses in curves.items():
+        r = rounds_to(losses, target)
+        decentralized = "GADMM" in name
+        per_worker_bits = bits_per_round[name] / n_workers
+        if decentralized:
+            e_round = cm.round_energy_decentralized(
+                np.full(n_workers, per_worker_bits), bd, radio)
+        else:
+            up = (bits_per_round[name] - 32 * d) / n_workers
+            e_round = cm.round_energy_ps(up, placement.ps_dist, 32 * d, radio)
+        total_bits = r * bits_per_round[name] if r > 0 else np.inf
+        total_e = r * e_round if r > 0 else np.inf
+        rows.append(dict(alg=name, rounds_to_1e4=r,
+                         bits_per_round=bits_per_round[name],
+                         total_bits=total_bits, total_energy_J=total_e,
+                         final_loss=float(losses[-1])))
+    return rows, curves
+
+
+def main(quick=False):
+    rows, _ = run(quick=quick)
+    base_bits = next(r for r in rows if r["alg"] == "GADMM")["total_bits"]
+    for r in rows:
+        derived = (f"rounds={r['rounds_to_1e4']};"
+                   f"bits={r['total_bits']:.3g};"
+                   f"bits_vs_GADMM={r['total_bits']/base_bits:.3f};"
+                   f"energy_J={r['total_energy_J']:.3g}")
+        print(f"fig2_linreg_{r['alg']},0,{derived}")
+
+
+if __name__ == "__main__":
+    main()

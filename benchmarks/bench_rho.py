@@ -1,0 +1,44 @@
+"""Paper Fig. 7: sensitivity to the disagreement penalty rho."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import gadmm  # noqa: E402
+from repro.core.quantizer import QuantizerConfig  # noqa: E402
+
+from .bench_linreg import REL_TARGET  # noqa: E402
+from .common import linreg_problem, rounds_to, run_gadmm_curve  # noqa: E402
+
+
+def run(rhos=(2.0, 7.0, 24.0, 100.0), iters=400, bits=4, quick=False):
+    if quick:
+        rhos = (2.0, 24.0)
+    xs, ys, xtx, xty, theta_star = linreg_problem()
+    from repro.core.baselines import PSProblem
+
+    prob = PSProblem(xtx=xtx, xty=xty)
+    target = REL_TARGET * abs(float(prob.objective(theta_star)))
+    rows = []
+    for rho in rhos:
+        for name, quant in (("GADMM", False), ("Q-GADMM", True)):
+            cfg = gadmm.GADMMConfig(rho=rho, quantize=quant,
+                                    qcfg=QuantizerConfig(bits=bits))
+            losses, _ = run_gadmm_curve(xs, ys, cfg, iters, theta_star)
+            rows.append(dict(alg=name, rho=rho,
+                             rounds=rounds_to(losses, target),
+                             final=float(losses[-1])))
+    return rows
+
+
+def main(quick=False):
+    for r in run(quick=quick):
+        print(f"fig7_rho_{r['alg']}_rho{r['rho']:g},0,"
+              f"rounds={r['rounds']};final_loss={r['final']:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 6(a): scalability — total transmitted bits to reach the target
+vs number of workers, Q-GADMM vs GADMM."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import gadmm  # noqa: E402
+from repro.core.quantizer import QuantizerConfig  # noqa: E402
+
+from .bench_linreg import REL_TARGET  # noqa: E402
+from .common import linreg_problem, rounds_to, run_gadmm_curve  # noqa: E402
+
+
+def run(worker_counts=(10, 20, 50), iters=400, rho=24.0, bits=4, quick=False):
+    if quick:
+        worker_counts = (10, 20)
+    rows = []
+    for n in worker_counts:
+        xs, ys, xtx, xty, theta_star = linreg_problem(n_workers=n)
+        d = xs.shape[-1]
+        import jax.numpy as jnp
+
+        from repro.core.baselines import PSProblem
+
+        prob = PSProblem(xtx=xtx, xty=xty)
+        target = REL_TARGET * abs(float(prob.objective(theta_star)))
+        for name, cfg in [
+            ("GADMM", gadmm.GADMMConfig(rho=rho, quantize=False)),
+            (f"Q-GADMM-{bits}b",
+             gadmm.GADMMConfig(rho=rho, quantize=True,
+                               qcfg=QuantizerConfig(bits=bits))),
+        ]:
+            losses, _ = run_gadmm_curve(xs, ys, cfg, iters, theta_star)
+            r = rounds_to(losses, target)
+            bpr = gadmm.bits_per_round(cfg, n, d)
+            rows.append(dict(alg=name, n=n, rounds=r,
+                             total_bits=r * bpr if r > 0 else np.inf))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    for r in rows:
+        print(f"fig6_workers_{r['alg']}_N{r['n']},0,"
+              f"rounds={r['rounds']};bits={r['total_bits']:.3g}")
+    # scalability claim: bits grow ~linearly in N with a stable Q/G ratio
+    for n in sorted({r["n"] for r in rows}):
+        g = next(r for r in rows if r["n"] == n and r["alg"] == "GADMM")
+        q = next(r for r in rows if r["n"] == n and r["alg"] != "GADMM")
+        if np.isfinite(q["total_bits"]) and np.isfinite(g["total_bits"]):
+            print(f"fig6_ratio_N{n},0,q_over_g="
+                  f"{q['total_bits']/g['total_bits']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

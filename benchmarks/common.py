@@ -1,0 +1,78 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gadmm
+from repro.core.baselines import PSProblem, run_adiana, run_gd
+from repro.core.quantizer import QuantizerConfig
+from repro.core.topology import random_placement
+from repro.core import comm_model as cm
+from repro.data.synthetic import regression_shards
+
+
+def linreg_problem(n_workers=50, samples=20000, d=6, seed=0,
+                   heterogeneous=False):
+    """Paper Sec. V-A setting: samples distributed uniformly (iid) across
+    workers.  f64 when x64 is enabled (needed for loss floors < 1e-6 rel)."""
+    xs, ys, _ = regression_shards(n_workers, samples, d, seed,
+                                  heterogeneous=heterogeneous)
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    xs, ys = jnp.asarray(xs, dtype), jnp.asarray(ys, dtype)
+    xtx = jnp.einsum("nmd,nme->nde", xs, xs)
+    xty = jnp.einsum("nmd,nm->nd", xs, ys)
+    theta_star = jnp.linalg.solve(xtx.sum(0), xty.sum(0))
+    return xs, ys, xtx, xty, theta_star
+
+
+def run_gadmm_curve(xs, ys, cfg: gadmm.GADMMConfig, iters: int, theta_star):
+    """Returns losses |F - F*| per iteration."""
+    n, _, d = xs.shape
+    q = gadmm.make_quadratic(xs, ys, cfg.rho)
+    fstar = float(q.objective(jnp.broadcast_to(theta_star, (n, d))))
+    st = gadmm.init_state(n, d, cfg)
+    step = jax.jit(functools.partial(gadmm.gadmm_step, q=q, cfg=cfg))
+    losses = []
+    for _ in range(iters):
+        st = step(st)
+        losses.append(abs(float(q.objective(st.theta)) - fstar))
+    return np.asarray(losses), st
+
+
+def rounds_to(losses: np.ndarray, target: float) -> int:
+    hit = np.nonzero(losses <= target)[0]
+    return int(hit[0]) + 1 if len(hit) else -1
+
+
+def energy_curves(placement, radio: cm.RadioConfig, d: int, iters: int,
+                  algs: dict) -> dict:
+    """algs: name -> dict(decentralized: bool, bits_per_worker: fn(iter)->bits
+    upload, download_bits).  Returns name -> cumulative energy array."""
+    out = {}
+    bd = placement.broadcast_dist()
+    chain_order_bd = bd  # indexed by chain position
+    for name, a in algs.items():
+        per_round = []
+        if a["decentralized"]:
+            e = cm.round_energy_decentralized(
+                np.full(placement.n, a["upload_bits"]), chain_order_bd, radio)
+        else:
+            e = cm.round_energy_ps(a["upload_bits"], placement.ps_dist,
+                                   a["download_bits"], radio)
+        out[name] = np.cumsum(np.full(iters, e))
+    return out
+
+
+def timed(fn, *args, reps=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
+        r, jax.Array) else None
+    return (time.perf_counter() - t0) / reps * 1e6  # us

@@ -1,0 +1,62 @@
+"""Roofline table from dry-run JSON (see repro.launch.dryrun / EXPERIMENTS.md).
+
+  PYTHONPATH=src python -m benchmarks.roofline dryrun_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def rows_from(path: str):
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    for r in data:
+        if "error" in r:
+            rows.append(dict(arch=r["arch"], shape=r["shape"], error=r["error"]))
+            continue
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            compute_ms=r["compute_s"] * 1e3,
+            memory_ms=r["memory_s"] * 1e3,
+            collective_ms=r["collective_s"] * 1e3,
+            dominant=r["dominant"].replace("_s", ""),
+            useful=r["useful_flops_ratio"],
+            hbm_gb=hbm / 1e9,
+            fits="Y" if hbm <= HBM_PER_CHIP else "N",
+        ))
+    return rows
+
+
+def main(argv=None):
+    argv = argv or sys.argv[1:]
+    path = argv[0] if argv else "dryrun_singlepod.json"
+    rows = rows_from(path)
+    hdr = (f"{'arch':28s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collect':>9s} {'dominant':>10s} {'useful':>7s} {'GB/dev':>8s} fits")
+    print(hdr)
+    for r in rows:
+        if "error" in r:
+            print(f"{r['arch']:28s} {r['shape']:12s} ERROR {r['error'][:60]}")
+            continue
+        print(f"{r['arch']:28s} {r['shape']:12s} {r['compute_ms']:8.2f}m "
+              f"{r['memory_ms']:8.2f}m {r['collective_ms']:8.2f}m "
+              f"{r['dominant']:>10s} {r['useful']:7.3f} {r['hbm_gb']:8.2f} "
+              f"{r['fits']}")
+        print(f"roofline_{r['arch']}_{r['shape']},0,"
+              f"compute_ms={r['compute_ms']:.3f};memory_ms={r['memory_ms']:.3f};"
+              f"collective_ms={r['collective_ms']:.3f};dominant={r['dominant']};"
+              f"useful={r['useful']:.3f};hbm_gb={r['hbm_gb']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

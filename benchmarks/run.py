@@ -1,0 +1,63 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  Full runs:
+
+  PYTHONPATH=src python -m benchmarks.run          # quick mode (CI)
+  PYTHONPATH=src python -m benchmarks.run --full   # paper-scale settings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from . import (bench_compute_time, bench_dnn, bench_energy_cdf,
+                   bench_jacobi, bench_kernels, bench_linreg, bench_rho,
+                   bench_workers)
+
+    benches = {
+        "linreg": bench_linreg.main,          # Fig. 2
+        "energy_cdf": bench_energy_cdf.main,  # Fig. 3
+        "dnn": bench_dnn.main,                # Fig. 4
+        "workers": bench_workers.main,        # Fig. 6
+        "rho": bench_rho.main,                # Fig. 7
+        "compute_time": bench_compute_time.main,  # Fig. 8
+        "kernels": bench_kernels.main,
+        "jacobi": bench_jacobi.main,          # beyond-paper variant
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(quick=quick)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc()
+    # roofline table (if a dry-run JSON is present)
+    import os
+
+    for path in ("dryrun_singlepod.json", "dryrun_multipod.json",
+                 "dryrun_singlepod_opt.json", "dryrun_multipod_opt.json"):
+        if os.path.exists(path):
+            print(f"# --- roofline ({path}) ---", flush=True)
+            from . import roofline
+
+            roofline.main([path])
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

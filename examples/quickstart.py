@@ -1,0 +1,47 @@
+"""Quickstart: Q-GADMM on decentralized linear regression (paper Sec. V-A).
+
+50 workers on a chain, each holding a private shard; 2-bit stochastic
+quantization of model differences.  Runs in seconds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gadmm
+from repro.core.quantizer import QuantizerConfig
+from repro.data.synthetic import regression_shards
+
+N_WORKERS, D = 50, 6
+
+# 1) private data shards (California-housing-like synthetic)
+xs, ys, _ = regression_shards(n_workers=N_WORKERS, samples=20000, d=D,
+                              heterogeneous=False)
+xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+
+# 2) the centralized optimum, for reference only (no worker ever sees this)
+xtx = jnp.einsum("nmd,nme->nde", xs, xs)
+xty = jnp.einsum("nmd,nm->nd", xs, ys)
+theta_star = jnp.linalg.solve(xtx.sum(0), xty.sum(0))
+
+# 3) Q-GADMM: chain ADMM + 2-bit stochastic quantization of model deltas
+cfg = gadmm.GADMMConfig(rho=24.0, quantize=True,
+                        qcfg=QuantizerConfig(bits=2))
+quad = gadmm.make_quadratic(xs, ys, cfg.rho)
+state = gadmm.init_state(N_WORKERS, D, cfg)
+step = jax.jit(functools.partial(gadmm.gadmm_step, q=quad, cfg=cfg))
+
+print(f"{'iter':>5s} {'theta err':>12s} {'consensus':>12s} {'payload':>12s}")
+for k in range(1, 201):
+    state = step(state)
+    if k % 25 == 0 or k == 1:
+        err = float(jnp.max(jnp.abs(state.theta - theta_star[None])))
+        cons, _ = gadmm.residuals(state)
+        bits = gadmm.bits_per_round(cfg, N_WORKERS, D)
+        print(f"{k:5d} {err:12.6f} {float(cons):12.6f} {bits:9d} bits"
+              f" (vs {N_WORKERS * 32 * D} unquantized)")
+
+print("\nEvery worker agrees with the centralized solution, having exchanged"
+      "\nonly 2-bit quantized model differences with two neighbors.")

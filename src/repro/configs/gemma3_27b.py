@@ -1,0 +1,24 @@
+"""gemma3-27b [dense]: 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144 — 5 local (sliding window) : 1 global layers, 128k context.
+[hf:google/gemma-3-1b-pt family]
+
+Adaptation note: gemma3 uses GeGLU; our gated MLP uses SiLU gating (same
+structure/FLOPs).  Sliding window 1024 as in gemma3.
+"""
+from repro.models.config import ArchConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, d_ff=21504,
+        head_dim=128, vocab=262144, activation="silu", rope_theta=1e6,
+        sliding_window=1024, global_every=6, tie_embeddings=True, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-27b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+        head_dim=32, vocab=193, activation="silu", rope_theta=1e6,
+        sliding_window=8, global_every=2, tie_embeddings=True, **kw)

@@ -1,0 +1,23 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8) expert
+d_ff=8192, vocab=202048, MoE 128 experts top-1 + shared expert, alternating
+dense/MoE layers, early fusion.  [hf:meta-llama/Llama-4-Scout-17B-16E family]"""
+from repro.models.config import ArchConfig, MoEConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="llama4-maverick-400b-a17b", family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=16384,
+        head_dim=128, vocab=202048, activation="silu", rope_theta=5e5,
+        moe=MoEConfig(num_experts=128, top_k=1, d_ff_expert=8192,
+                      shared_expert_ff=8192, moe_every=2), **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="llama4-maverick-smoke", family="moe",
+        n_layers=2, d_model=96, n_heads=4, n_kv_heads=2, d_ff=192,
+        head_dim=24, vocab=151, activation="silu", rope_theta=5e5,
+        moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=96,
+                      shared_expert_ff=96, moe_every=2,
+                      capacity_factor=4.0), **kw)  # drop-free: cf >= E/k

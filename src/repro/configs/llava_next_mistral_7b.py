@@ -1,0 +1,22 @@
+"""llava-next-mistral-7b [vlm]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling.  [hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+Vision tower + projector are stubbed: the pipeline supplies 1152 pre-projected
+patch embeddings (anyres: base 576 + one 576-patch tile), prepended to the
+text sequence (early fusion).
+"""
+from repro.models.config import ArchConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-mistral-7b", family="vlm",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+        vocab=32000, activation="silu", rope_theta=1e6, n_patches=1152, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-smoke", family="vlm",
+        n_layers=2, d_model=96, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=127, activation="silu", rope_theta=1e6, n_patches=12, **kw)

@@ -1,0 +1,21 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attention-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060]"""
+from repro.models.config import ArchConfig, SSMConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-2.7b", family="ssm",
+        n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0, d_ff=0,
+        vocab=50280, activation="silu",
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, n_groups=1,
+                      chunk=256), **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0,
+        vocab=137, activation="silu",
+        ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, n_groups=1,
+                      chunk=8), **kw)

@@ -1,0 +1,18 @@
+"""nemotron-4-340b [dense]: 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000 — GQA, squared-ReLU MLP.  [arXiv:2402.16819]"""
+from repro.models.config import ArchConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="nemotron-4-340b", family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8, d_ff=73728,
+        vocab=256000, head_dim=192, activation="relu2", rope_theta=1e4,
+        qkv_bias=False, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="nemotron-4-340b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_ff=512,
+        vocab=251, head_dim=16, activation="relu2", rope_theta=1e4, **kw)

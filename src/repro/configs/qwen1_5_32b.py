@@ -1,0 +1,17 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (GQA kv=40) d_ff=27392
+vocab=152064 — QKV bias.  [hf:Qwen/Qwen1.5-0.5B family]"""
+from repro.models.config import ArchConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, d_ff=27392,
+        vocab=152064, activation="silu", qkv_bias=True, rope_theta=1e6, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=8, d_ff=384,
+        vocab=211, activation="silu", qkv_bias=True, rope_theta=1e6, **kw)

@@ -1,0 +1,17 @@
+"""qwen1.5-4b [dense]: 40L d_model=2560 20H (GQA kv=20) d_ff=6912
+vocab=151936 — QKV bias.  [hf:Qwen/Qwen1.5-0.5B family]"""
+from repro.models.config import ArchConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-4b", family="dense",
+        n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, d_ff=6912,
+        vocab=151936, activation="silu", qkv_bias=True, rope_theta=1e6, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-4b-smoke", family="dense",
+        n_layers=2, d_model=96, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab=173, activation="silu", qkv_bias=True, rope_theta=1e6, **kw)

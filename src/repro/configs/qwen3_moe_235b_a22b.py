@@ -1,0 +1,22 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) expert d_ff=1536
+vocab=151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B family]"""
+from repro.models.config import ArchConfig, MoEConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-235b-a22b", family="moe",
+        n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_ff=0,
+        head_dim=128, vocab=151936, activation="silu", rope_theta=1e6,
+        moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536,
+                      moe_every=1), **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-smoke", family="moe",
+        n_layers=2, d_model=96, n_heads=4, n_kv_heads=2, d_ff=0,
+        head_dim=24, vocab=149, activation="silu", rope_theta=1e6,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64, moe_every=1,
+                      capacity_factor=2.0),  # drop-free: cf >= E/k
+        **kw)

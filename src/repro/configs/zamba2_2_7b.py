@@ -1,0 +1,29 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242]
+
+Adaptation: the shared attention block is invoked once per 6 Mamba layers
+with a 4096 sliding window so the hybrid's attention state is bounded
+(qualifies for long_500k decode).
+"""
+from repro.models.config import ArchConfig, SSMConfig
+
+
+def config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-2.7b", family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240,
+        vocab=32000, activation="silu", rope_theta=1e4,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, n_groups=1,
+                      chunk=128),
+        attn_every=6, sliding_window=4096, **kw)
+
+
+def smoke_config(**kw) -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=131, activation="silu", rope_theta=1e4,
+        ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, n_groups=1,
+                      chunk=8),
+        attn_every=2, sliding_window=16, **kw)

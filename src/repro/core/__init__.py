@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — Q-GADMM / Q-SGADMM and their baselines."""
+from .gadmm import (ChainState, GADMMConfig, Quadratic, bits_per_round,
+                    gadmm_step, init_state, make_quadratic)
+from .quantizer import (QuantizerConfig, QuantState, dequantize, payload_bits,
+                        quantize)
+from .sgadmm import SGADMMConfig, SGADMMTrainer
+
+__all__ = [
+    "ChainState", "GADMMConfig", "Quadratic", "bits_per_round", "gadmm_step",
+    "init_state", "make_quadratic", "QuantizerConfig", "QuantState",
+    "dequantize", "payload_bits", "quantize", "SGADMMConfig", "SGADMMTrainer",
+]

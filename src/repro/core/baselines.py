@@ -1,0 +1,131 @@
+"""Parameter-server baselines of the paper's evaluation: GD, QGD, ADIANA.
+
+All solve  min_theta sum_n f_n(theta),  f_n quadratic (linear regression),
+with N workers uploading (possibly quantized) gradients to a PS each round and
+the PS broadcasting the model back.
+
+Communication accounting per iteration (paper Sec. V-A):
+  GD:     N uploads of 32 d bits            + PS download 32 d
+  QGD:    N uploads of (b d + 32) bits      + PS download 32 d
+  ADIANA: N uploads of 2 quantized vectors (32 + 2 b d) + PS download 32 d
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PSProblem:
+    xtx: Array   # (N, d, d)
+    xty: Array   # (N, d)
+
+    @property
+    def n(self) -> int:
+        return self.xtx.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.xtx.shape[-1]
+
+    def grad(self, theta: Array) -> Array:
+        """Per-worker gradients, (N, d)."""
+        return jnp.einsum("nde,e->nd", self.xtx, theta) - self.xty
+
+    def objective(self, theta: Array) -> Array:
+        quad = 0.5 * jnp.einsum("d,nde,e->", theta, self.xtx, theta)
+        return quad - jnp.einsum("nd,d->", self.xty, theta)
+
+    def lipschitz(self) -> float:
+        total = jnp.sum(self.xtx, axis=0)
+        return float(jnp.linalg.eigvalsh(total)[-1])
+
+    def strong_convexity(self) -> float:
+        total = jnp.sum(self.xtx, axis=0)
+        return float(jnp.linalg.eigvalsh(total)[0])
+
+
+def _stoch_quantize(g: Array, key: Array, bits: int) -> Array:
+    """Unbiased stochastic quantization of a raw vector (range = inf norm)."""
+    r = jnp.max(jnp.abs(g))
+    levels = 2.0**bits - 1.0
+    safe_r = jnp.maximum(r, 1e-30)
+    step = 2.0 * safe_r / levels
+    c = (g + r) / step
+    low = jnp.floor(c)
+    u = jax.random.uniform(key, g.shape)
+    q = jnp.clip(low + (u < (c - low)), 0.0, levels)
+    out = step * q - r
+    return jnp.where(r > 0, out, g)
+
+
+def run_gd(problem: PSProblem, iters: int, lr: float | None = None,
+           quantize_bits: int | None = None, seed: int = 0):
+    """(Q)GD: returns (thetas (iters, d), bits_per_iter)."""
+    lr = lr if lr is not None else 1.0 / problem.lipschitz()
+    d = problem.d
+
+    def body(carry, k):
+        theta, key = carry
+        g = problem.grad(theta)
+        if quantize_bits is not None:
+            key, sub = jax.random.split(key)
+            keys = jax.random.split(sub, problem.n)
+            g = jax.vmap(lambda gi, ki: _stoch_quantize(gi, ki, quantize_bits))(g, keys)
+        theta = theta - lr * jnp.sum(g, axis=0)
+        return (theta, key), theta
+
+    (_, _), thetas = jax.lax.scan(
+        body, (jnp.zeros((d,)), jax.random.PRNGKey(seed)), jnp.arange(iters))
+    if quantize_bits is None:
+        up = 32 * d
+    else:
+        up = quantize_bits * d + 32
+    bits_per_iter = problem.n * up + 32 * d
+    return thetas, bits_per_iter
+
+
+def run_adiana(problem: PSProblem, iters: int, bits: int = 2, seed: int = 0):
+    """Accelerated DIANA [Li et al. 2020], quantized gradient differences.
+
+    Parameters follow the strongly-convex setting of the source paper with the
+    random-quantization variance parameter omega ~ min(d/s^2, sqrt(d)/s),
+    s = 2^b - 1:  alpha = 1/(1+omega), eta = min(1/(2L(1+...)), ...) simplified
+    to eta = 1/(2 L (1 + omega)), theta-momentum tau, and gamma from mu.
+    """
+    d = problem.d
+    n = problem.n
+    L = problem.lipschitz()
+    mu = max(problem.strong_convexity(), 1e-12)
+    s = 2.0**bits - 1.0
+    omega = min(d / s**2, jnp.sqrt(d) / s)
+    alpha = 1.0 / (1.0 + omega)
+    eta = 1.0 / (2.0 * L * (1.0 + omega))
+    tau = min(0.5, float(jnp.sqrt(eta * mu)))
+    gamma = eta / (2.0 * (tau + eta * mu))
+
+    def body(carry, k):
+        y, z, h, key = carry  # h: (N, d) per-worker shifts
+        x = tau * z + (1.0 - tau) * y
+        g_local = problem.grad(x)  # (N, d) with grad of sum split per worker
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        delta = jax.vmap(lambda gi, hi, ki: _stoch_quantize(gi - hi, ki, bits))(
+            g_local, h, keys)
+        g = jnp.sum(h + delta, axis=0)
+        h = h + alpha * delta
+        y_new = x - eta * g
+        z_new = (z + gamma * mu * x - gamma * g) / (1.0 + gamma * mu)
+        return (y_new, z_new, h, key), y_new
+
+    z0 = jnp.zeros((d,))
+    (_, _, _, _), ys = jax.lax.scan(
+        body, (z0, z0, jnp.zeros((n, d)), jax.random.PRNGKey(seed)),
+        jnp.arange(iters))
+    bits_per_iter = n * (32 + 2 * bits * d) + 32 * d
+    return ys, bits_per_iter

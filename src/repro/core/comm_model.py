@@ -1,0 +1,63 @@
+"""Wireless communication cost model of paper Sec. V-A.
+
+Free-space pathloss, Shannon capacity: to ship `bits` within slot time tau over
+bandwidth B at distance D with noise PSD N0, the required rate is
+R = bits / tau [bit/s], the required transmit power is
+
+    P = D^2 * N0 * B * (2^(R/B) - 1)        (Shannon, free-space D^2 loss)
+
+and the consumed energy is E = P * tau.  Paper defaults: total system bandwidth
+2 MHz split across concurrently-transmitting workers; N0 = 1e-6 W/Hz; tau = 1 ms
+(100 ms for the DNN task).
+
+Bandwidth split: GADMM-family alternates head/tail groups so only half the
+workers transmit per communication round -> each gets (2*Btot/N); PS-based
+algorithms have all N workers competing -> Btot/N.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RadioConfig:
+    total_bandwidth_hz: float = 2e6
+    noise_psd: float = 1e-6         # W/Hz
+    slot_s: float = 1e-3            # tau
+    n_workers: int = 50
+
+    def worker_bandwidth(self, decentralized: bool) -> float:
+        share = 2.0 if decentralized else 1.0
+        return share * self.total_bandwidth_hz / self.n_workers
+
+
+def tx_energy(bits: float, dist_m: float, bandwidth_hz: float,
+              slot_s: float, noise_psd: float) -> float:
+    """Energy (J) to transmit `bits` in one slot at distance dist_m."""
+    rate = bits / slot_s
+    power = (dist_m**2) * noise_psd * bandwidth_hz * (2.0 ** (rate / bandwidth_hz) - 1.0)
+    return power * slot_s
+
+
+def round_energy_decentralized(bits_per_worker: np.ndarray, dists: np.ndarray,
+                               radio: RadioConfig) -> float:
+    """Sum energy of one GADMM/Q-GADMM communication round (all N broadcasts)."""
+    bw = radio.worker_bandwidth(decentralized=True)
+    return float(
+        sum(tx_energy(b, d, bw, radio.slot_s, radio.noise_psd)
+            for b, d in zip(np.broadcast_to(bits_per_worker, dists.shape), dists))
+    )
+
+
+def round_energy_ps(upload_bits: float, ps_dists: np.ndarray,
+                    download_bits: float, radio: RadioConfig) -> float:
+    """N uplinks of upload_bits + one PS downlink of download_bits (to the
+    farthest worker, full band)."""
+    bw = radio.worker_bandwidth(decentralized=False)
+    up = sum(tx_energy(upload_bits, d, bw, radio.slot_s, radio.noise_psd)
+             for d in ps_dists)
+    down = tx_energy(download_bits, float(ps_dists.max()),
+                     radio.total_bandwidth_hz, radio.slot_s, radio.noise_psd)
+    return float(up + down)

@@ -1,0 +1,193 @@
+"""Stochastic quantizer of Q-GADMM (paper eqs. 6-13).
+
+Worker n at iteration k quantizes the *difference* between its current model
+theta_n^k and its previously-quantized model theta_hat_n^{k-1}:
+
+    R      = ||theta - theta_hat_prev||_inf                 (quantization radius)
+    Delta  = 2 R / (2^b - 1)                                (step size)
+    c_i    = (theta_i - theta_hat_prev_i + R) / Delta       (non-negative coords)
+    q_i    = ceil(c_i)  w.p.  c_i - floor(c_i)              (stochastic rounding,
+             floor(c_i) otherwise                            eq. 7 + eq. 10)
+    theta_hat = theta_hat_prev + Delta * q - R * 1          (reconstruction, eq. 13)
+
+The rounding probability choice makes E[theta_hat] = theta (unbiased, eq. 8)
+with per-coordinate variance <= Delta^2 / 4.
+
+The payload actually transmitted is (q:int levels, R:f32, b:int) -> b*d + 64 bits
+instead of 32*d bits for a full-precision vector.
+
+Everything here is pure JAX and jit/vmap/pjit friendly.  A fused Pallas TPU
+kernel for the same computation lives in repro/kernels/quantize (ops.q_dequantize
+dispatches to it when enabled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerConfig:
+    """Static configuration of the stochastic quantizer.
+
+    bits:       quantizer resolution b (levels = 2^b - 1 intervals).  The paper
+                uses b=2 for linear regression and b=8 for the DNN task.
+    adapt_bits: if True, apply the bit-growth rule (eq. 11) that keeps
+                Delta_n^k non-increasing.  The paper observes R_n^k decreases in
+                practice so fixed bits suffice; both modes are supported.
+    max_bits:   cap for adaptive bits (payload dtype is int8 / packed int4).
+
+    (Tighter-than-global ranges are provided by the distributed trainer's
+    radius_mode='per_tensor'; see repro.dist.qgadmm.)
+    """
+
+    bits: int = 2
+    adapt_bits: bool = False
+    max_bits: int = 8
+
+    def __post_init__(self):
+        assert 1 <= self.bits <= self.max_bits <= 8
+
+
+@dataclasses.dataclass
+class QuantState:
+    """Carried across iterations for one worker's tensor (pytree)."""
+
+    theta_hat: Any  # previously quantized model \hat{theta}^{k-1}
+    radius: Array   # R^{k-1}   (scalar, or (num_blocks,) in block mode)
+    bits: Array     # b^{k-1}   (scalar int32)
+
+
+def init_state(theta: Any, cfg: QuantizerConfig) -> QuantState:
+    """Quantizer state at k=0: theta_hat = 0 (paper initializes theta^0 = 0)."""
+    zeros = jax.tree.map(jnp.zeros_like, theta)
+    radius = jnp.zeros((), jnp.float32)
+    return QuantState(theta_hat=zeros, radius=radius, bits=jnp.asarray(cfg.bits, jnp.int32))
+
+
+def _next_bits(cfg: QuantizerConfig, bits_prev: Array, r_new: Array, r_prev: Array) -> Array:
+    """Bit-growth rule (eq. 11): smallest b s.t. Delta^k <= Delta^{k-1}."""
+    if not cfg.adapt_bits:
+        return jnp.asarray(cfg.bits, jnp.int32)
+    levels_prev = (2.0 ** bits_prev.astype(jnp.float32)) - 1.0
+    ratio = jnp.where(r_prev > 0, r_new / jnp.maximum(r_prev, 1e-30), 0.0)
+    needed = jnp.ceil(jnp.log2(1.0 + levels_prev * ratio))
+    b = jnp.clip(needed.astype(jnp.int32), 1, cfg.max_bits)
+    # first iteration (r_prev == 0): fall back to configured bits
+    return jnp.where(r_prev > 0, b, jnp.asarray(cfg.bits, jnp.int32))
+
+
+def quantize_tensor(
+    theta: Array,
+    theta_hat_prev: Array,
+    key: Array,
+    *,
+    radius: Array,
+    bits: Array,
+) -> tuple[Array, Array]:
+    """Quantize one tensor given a (scalar) radius and bit width.
+
+    Returns (q_levels int8, theta_hat_new).  Levels fit in [0, 2^b - 1] <= 255.
+    """
+    delta_theta = theta.astype(jnp.float32) - theta_hat_prev.astype(jnp.float32)
+    levels = (2.0 ** bits.astype(jnp.float32)) - 1.0
+    # Guard R == 0 (already converged / first step with theta == theta_hat):
+    # then all coordinates quantize to the mid level and theta_hat is unchanged.
+    safe_r = jnp.maximum(radius, 1e-30)
+    step = 2.0 * safe_r / levels
+    c = (delta_theta + radius) / step
+    low = jnp.floor(c)
+    p = c - low  # eq. (10)
+    u = jax.random.uniform(key, theta.shape, jnp.float32)
+    q = low + (u < p).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, levels)
+    theta_hat = theta_hat_prev.astype(jnp.float32) + step * q - radius
+    theta_hat = jnp.where(radius > 0, theta_hat, theta_hat_prev.astype(jnp.float32))
+    return q.astype(jnp.uint8), theta_hat.astype(theta.dtype)
+
+
+def dequantize_tensor(
+    q: Array,
+    theta_hat_prev: Array,
+    *,
+    radius: Array,
+    bits: Array,
+) -> Array:
+    """Reconstruction (eq. 13) on the receiver side."""
+    levels = (2.0 ** bits.astype(jnp.float32)) - 1.0
+    safe_r = jnp.maximum(radius, 1e-30)
+    step = 2.0 * safe_r / levels
+    out = theta_hat_prev.astype(jnp.float32) + step * q.astype(jnp.float32) - radius
+    return jnp.where(radius > 0, out, theta_hat_prev.astype(jnp.float32)).astype(
+        theta_hat_prev.dtype
+    )
+
+
+def global_radius(theta: Any, theta_hat_prev: Any) -> Array:
+    """R^k = || theta - theta_hat_prev ||_inf over the whole pytree."""
+    leaves = jax.tree.leaves(
+        jax.tree.map(
+            lambda a, b: jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))
+            if a.size
+            else jnp.zeros((), jnp.float32),
+            theta,
+            theta_hat_prev,
+        )
+    )
+    return jnp.max(jnp.stack(leaves)) if leaves else jnp.zeros((), jnp.float32)
+
+
+def quantize(
+    theta: Any,
+    state: QuantState,
+    key: Array,
+    cfg: QuantizerConfig,
+) -> tuple[dict[str, Any], QuantState]:
+    """Quantize a pytree of tensors with one shared radius (paper-faithful).
+
+    Returns (payload, new_state).  payload = {'q': pytree uint8, 'radius': f32,
+    'bits': i32}; its wire size is bits*d + 64 bits.
+    The *sender-side* new_state.theta_hat equals the receiver's reconstruction,
+    keeping both sides exactly in sync (key requirement of the algorithm).
+    """
+    r_new = global_radius(theta, state.theta_hat)
+    bits = _next_bits(cfg, state.bits, r_new, state.radius)
+    leaves, treedef = jax.tree.flatten(theta)
+    hat_leaves = treedef.flatten_up_to(state.theta_hat)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    qs, hats = [], []
+    for x, h, k in zip(leaves, hat_leaves, keys):
+        q, hat = quantize_tensor(x, h, k, radius=r_new, bits=bits)
+        qs.append(q)
+        hats.append(hat)
+    payload = {
+        "q": jax.tree.unflatten(treedef, qs),
+        "radius": r_new,
+        "bits": bits,
+    }
+    new_state = QuantState(
+        theta_hat=jax.tree.unflatten(treedef, hats), radius=r_new, bits=bits
+    )
+    return payload, new_state
+
+
+def dequantize(payload: dict[str, Any], theta_hat_prev: Any) -> Any:
+    """Receiver-side reconstruction of the sender's theta_hat^k."""
+    return jax.tree.map(
+        lambda q, h: dequantize_tensor(
+            q, h, radius=payload["radius"], bits=payload["bits"]
+        ),
+        payload["q"],
+        theta_hat_prev,
+    )
+
+
+def payload_bits(cfg_or_bits, num_params: int) -> int:
+    """Wire size in bits of one transmission: b*d + (b_R + b_b) = b*d + 64."""
+    b = cfg_or_bits.bits if isinstance(cfg_or_bits, QuantizerConfig) else int(cfg_or_bits)
+    return b * num_params + 64

@@ -1,0 +1,159 @@
+"""SGADMM and Q-SGADMM: the stochastic / non-convex variant (paper Sec. V-B).
+
+Differences vs. the convex Algorithm 1:
+  * each worker's local argmin is replaced by `local_iters` Adam steps on the
+    stochastic augmented Lagrangian (minibatch resampled each outer iteration),
+  * the dual step is damped: lam <- lam + alpha * rho * (hat_n - hat_{n+1}),
+    alpha = 0.01 in the paper's experiments.
+
+The trainer is generic over any pytree model via ravel_pytree: all chain state
+is held as (N, d) flat vectors, so the quantizer/chain logic is shared with
+the convex solver's structure.  Workers' local optimizations run in parallel
+under vmap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .gadmm import GADMMConfig, _quantize_rows
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SGADMMConfig:
+    gadmm: GADMMConfig
+    local_iters: int = 10
+    local_lr: float = 1e-3
+    batch_size: int = 100
+
+
+class SGADMMState(NamedTuple):
+    theta: Array      # (N, d)
+    theta_hat: Array  # (N, d)
+    lam: Array        # (N+1, d)
+    radius: Array     # (N,)
+    bits: Array       # (N,)
+    adam_mu: Array    # (N, d)
+    adam_nu: Array    # (N, d)
+    adam_t: Array     # (N,)
+    key: Array
+    step: Array
+
+
+class SGADMMTrainer:
+    """Decentralized trainer for a pytree model over a worker chain."""
+
+    def __init__(self, loss_fn: Callable, params0, n_workers: int,
+                 cfg: SGADMMConfig, seed: int = 0):
+        flat0, self.unravel = ravel_pytree(params0)
+        self.d = flat0.size
+        self.n = n_workers
+        self.cfg = cfg
+        self.loss_fn = loss_fn  # loss_fn(params_pytree, x, y) -> scalar
+        self._flat_loss = lambda flat, x, y: loss_fn(self.unravel(flat), x, y)
+        self.state = SGADMMState(
+            theta=jnp.tile(flat0[None], (n_workers, 1)),
+            theta_hat=jnp.zeros((n_workers, self.d)),
+            lam=jnp.zeros((n_workers + 1, self.d)),
+            radius=jnp.zeros((n_workers,)),
+            bits=jnp.full((n_workers,), cfg.gadmm.qcfg.bits, jnp.int32),
+            adam_mu=jnp.zeros((n_workers, self.d)),
+            adam_nu=jnp.zeros((n_workers, self.d)),
+            adam_t=jnp.zeros((n_workers,), jnp.int32),
+            key=jax.random.PRNGKey(seed),
+            step=jnp.zeros((), jnp.int32),
+        )
+        self._step = jax.jit(self._make_step())
+
+    # -- augmented Lagrangian seen by worker n (eq. 14/16 with stochastic f) --
+    def _local_loss(self, flat, x, y, lam_l, lam_r, hat_l, hat_r, has_l, has_r):
+        rho = self.cfg.gadmm.rho
+        f = self._flat_loss(flat, x, y)
+        dual = jnp.vdot(lam_l, hat_l - flat) + jnp.vdot(lam_r, flat - hat_r)
+        prox = 0.5 * rho * (has_l * jnp.sum((hat_l - flat) ** 2)
+                            + has_r * jnp.sum((flat - hat_r) ** 2))
+        # drop dual terms on missing neighbors (lam rows are zero there anyway)
+        return f + dual + prox
+
+    def _local_adam(self, theta, mu, nu, t, x, y, lam_l, lam_r, hat_l, hat_r,
+                    has_l, has_r):
+        cfg = self.cfg
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        grad_fn = jax.grad(self._local_loss)
+
+        def body(carry, _):
+            th, m, v, tt = carry
+            g = grad_fn(th, x, y, lam_l, lam_r, hat_l, hat_r, has_l, has_r)
+            tt = tt + 1
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** tt.astype(jnp.float32))
+            vhat = v / (1 - b2 ** tt.astype(jnp.float32))
+            th = th - cfg.local_lr * mhat / (jnp.sqrt(vhat) + eps)
+            return (th, m, v, tt), None
+
+        (theta, mu, nu, t), _ = jax.lax.scan(
+            body, (theta, mu, nu, t), None, length=cfg.local_iters)
+        return theta, mu, nu, t
+
+    def _make_step(self):
+        n, d = self.n, self.d
+        cfg = self.cfg
+        idx = jnp.arange(n)
+        is_head = (idx % 2 == 0)
+        has_l = (idx > 0).astype(jnp.float32)
+        has_r = (idx < n - 1).astype(jnp.float32)
+
+        def phase(state_tuple, xb, yb, active, key):
+            theta, hat, lam, radius, bits, mu, nu, t = state_tuple
+            hat_l = jnp.roll(hat, 1, axis=0) * has_l[:, None]
+            hat_r = jnp.roll(hat, -1, axis=0) * has_r[:, None]
+            new_theta, new_mu, new_nu, new_t = jax.vmap(self._local_adam)(
+                theta, mu, nu, t, xb, yb, lam[:-1], lam[1:], hat_l, hat_r,
+                has_l, has_r)
+            m = active[:, None]
+            theta = jnp.where(m, new_theta, theta)
+            mu = jnp.where(m, new_mu, mu)
+            nu = jnp.where(m, new_nu, nu)
+            t = jnp.where(active, new_t, t)
+            hat, radius, bits = _quantize_rows(
+                theta, hat, active, key, radius, bits, cfg.gadmm)
+            return theta, hat, lam, radius, bits, mu, nu, t
+
+        def step(state: SGADMMState, xb: Array, yb: Array) -> SGADMMState:
+            key, k_h, k_t = jax.random.split(state.key, 3)
+            st = (state.theta, state.theta_hat, state.lam, state.radius,
+                  state.bits, state.adam_mu, state.adam_nu, state.adam_t)
+            st = phase(st, xb, yb, is_head, k_h)
+            st = phase(st, xb, yb, ~is_head, k_t)
+            theta, hat, lam, radius, bits, mu, nu, t = st
+            resid = hat[:-1] - hat[1:]
+            lam = lam.at[1:-1].add(cfg.gadmm.alpha * cfg.gadmm.rho * resid[: n - 1])
+            lam = lam.at[0].set(0.0).at[-1].set(0.0)
+            return SGADMMState(theta=theta, theta_hat=hat, lam=lam,
+                               radius=radius, bits=bits, adam_mu=mu,
+                               adam_nu=nu, adam_t=t, key=key,
+                               step=state.step + 1)
+
+        return step
+
+    def train_step(self, xb: Array, yb: Array) -> None:
+        """xb: (N, batch, dim), yb: (N, batch) minibatch per worker."""
+        self.state = self._step(self.state, xb, yb)
+
+    def worker_params(self, n: int):
+        return self.unravel(self.state.theta[n])
+
+    def mean_params(self):
+        return self.unravel(jnp.mean(self.state.theta, axis=0))
+
+    def bits_per_round(self) -> int:
+        from .gadmm import bits_per_round
+
+        return bits_per_round(self.cfg.gadmm, self.n, self.d)

@@ -1,0 +1,74 @@
+"""Chain topology construction (paper Sec. V-A settings).
+
+Workers are dropped uniformly at random in a 250x250 m^2 grid.  The
+decentralized algorithms (GADMM / Q-GADMM) connect them in a chain built by the
+nearest-neighbor heuristic of [23]: start from an arbitrary worker (we use the
+one closest to the grid corner) and repeatedly append the nearest unvisited
+worker.  PS-based baselines use the worker with minimum sum-distance to all
+others as the parameter server.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    positions: np.ndarray      # (N, 2) worker coordinates in meters
+    chain: np.ndarray          # (N,) permutation: chain order of worker ids
+    ps_index: int              # worker id acting as parameter server
+    chain_hop_dist: np.ndarray  # (N-1,) distance between chain neighbors
+    ps_dist: np.ndarray        # (N,) distance of every worker to the PS
+
+    @property
+    def n(self) -> int:
+        return len(self.positions)
+
+    def broadcast_dist(self) -> np.ndarray:
+        """Per-worker transmit distance on the chain: the farther neighbor.
+
+        Worker i (chain position) broadcasts its model to both neighbors; the
+        transmit power is set by the farther of the two.
+        """
+        d = self.chain_hop_dist
+        out = np.empty(self.n)
+        out[0] = d[0]
+        out[-1] = d[-1]
+        if self.n > 2:
+            out[1:-1] = np.maximum(d[:-1], d[1:])
+        return out
+
+
+def random_placement(n: int, seed: int, grid: float = 250.0) -> Placement:
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.0, grid, size=(n, 2))
+    # nearest-neighbor chain heuristic
+    start = int(np.argmin(pos.sum(axis=1)))
+    unvisited = set(range(n)) - {start}
+    chain = [start]
+    while unvisited:
+        last = pos[chain[-1]]
+        nxt = min(unvisited, key=lambda j: float(np.sum((pos[j] - last) ** 2)))
+        chain.append(nxt)
+        unvisited.remove(nxt)
+    chain = np.asarray(chain)
+    hop = np.linalg.norm(pos[chain[1:]] - pos[chain[:-1]], axis=1)
+    # PS = min sum distance to all others
+    dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
+    ps = int(np.argmin(dmat.sum(axis=1)))
+    return Placement(
+        positions=pos,
+        chain=chain,
+        ps_index=ps,
+        chain_hop_dist=hop,
+        ps_dist=dmat[ps],
+    )
+
+
+def head_tail_split(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Chain positions 0,2,4,... are heads; 1,3,5,... are tails (paper's
+    1-indexed odd/even)."""
+    idx = np.arange(n)
+    return idx[idx % 2 == 0], idx[idx % 2 == 1]

@@ -1,0 +1,64 @@
+"""Host-side data pipeline: per-worker token shards -> device batches.
+
+Each GADMM worker owns a disjoint shard of the corpus (decentralized data
+never leaves the worker — that is the paper's privacy premise).  The loader
+yields batches shaped (W, per_worker_batch, seq) ready for
+QGADMMTrainer.place().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from .synthetic import token_shards
+
+
+@dataclasses.dataclass
+class LMShardLoader:
+    n_workers: int
+    per_worker_batch: int
+    seq_len: int
+    vocab: int
+    seed: int = 0
+    tokens_per_worker: int = 0
+
+    def __post_init__(self):
+        need = self.per_worker_batch * (self.seq_len + 1) * 64
+        self.tokens_per_worker = max(self.tokens_per_worker, need)
+        self.shards = token_shards(self.n_workers, self.tokens_per_worker,
+                                   self.vocab, self.seed)
+        self.rng = np.random.default_rng(self.seed + 1)
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        w, b, s = self.n_workers, self.per_worker_batch, self.seq_len
+        starts = self.rng.integers(0, self.tokens_per_worker - s - 1,
+                                   size=(w, b))
+        idx = starts[..., None] + np.arange(s + 1)[None, None]
+        window = np.take_along_axis(
+            self.shards, idx.reshape(w, b * (s + 1)), axis=1
+        ).reshape(w, b, s + 1)
+        return {"tokens": window[..., :-1].astype(np.int32),
+                "labels": window[..., 1:].astype(np.int32)}
+
+
+@dataclasses.dataclass
+class ExtraInputs:
+    """Stubbed modality frontends (VLM patches / audio frames)."""
+
+    @staticmethod
+    def patches(n_workers, per_batch, n_patches, d_model, seed=0):
+        rng = np.random.default_rng(seed)
+        return rng.normal(size=(n_workers, per_batch, n_patches, d_model)
+                          ).astype(np.float32)
+
+    @staticmethod
+    def frames(n_workers, per_batch, n_frames, d_model, seed=0):
+        rng = np.random.default_rng(seed)
+        return rng.normal(size=(n_workers, per_batch, n_frames, d_model)
+                          ).astype(np.float32)

@@ -1,0 +1,21 @@
+"""Jit'd wrappers for nibble pack/unpack with impl dispatch."""
+from __future__ import annotations
+
+import jax
+
+from . import pack as _kernel
+from . import ref as _ref
+
+Array = jax.Array
+
+
+def pack4(q: Array, *, impl: str = "pallas") -> Array:
+    if impl == "ref":
+        return _ref.pack4_ref(q)
+    return _kernel.pack4(q.reshape(-1), interpret=impl != "pallas_compiled")
+
+
+def unpack4(packed: Array, n: int, *, impl: str = "pallas") -> Array:
+    if impl == "ref":
+        return _ref.unpack4_ref(packed.reshape(-1), n)
+    return _kernel.unpack4(packed.reshape(-1), n, interpret=impl != "pallas_compiled")

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: int4 nibble pack / unpack.
+
+For b <= 4 quantizer bits the wire payload halves again by packing two levels
+per byte before the collective-permute.  Elementwise VPU work; blocks are
+(BLOCK_M, 2, 128) uint8 in VMEM.  Wire format (strided pairing, padded) is
+defined in ref.py; kernel and oracle produce bit-identical buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LANES, _pad_rows
+
+Array = jax.Array
+
+BLOCK_M = 256
+
+
+def _pack_kernel(q_ref, out_ref):
+    q = q_ref[...]  # (bm, 2, 128) uint8
+    out_ref[...] = (q[:, 0, :] | (q[:, 1, :] << 4)).astype(jnp.uint8)
+
+
+def _unpack_kernel(p_ref, out_ref):
+    p = p_ref[...]  # (bm, 128) uint8
+    lo = (p & 0xF).astype(jnp.uint8)
+    hi = (p >> 4).astype(jnp.uint8)
+    out_ref[...] = jnp.stack([lo, hi], axis=1)  # (bm, 2, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack4(q: Array, *, interpret: bool = True) -> Array:
+    """Pack flat uint8 levels (<16) into the wire format (128*ceil(n/256) bytes)."""
+    flat = q.reshape(-1)
+    rows = _pad_rows(flat.size)
+    pad = rows * 2 * LANES - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint8)])
+    q3 = flat.reshape(rows, 2, LANES)
+    block_m = min(BLOCK_M, rows)
+    grid = (-(-rows // block_m),)
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, 2, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_m, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(q3)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def unpack4(packed: Array, n: int, *, interpret: bool = True) -> Array:
+    """Unpack the wire format back to the first n uint8 levels."""
+    rows = _pad_rows(n)
+    p2 = packed.reshape(rows, LANES)
+    block_m = min(BLOCK_M, rows)
+    grid = (-(-rows // block_m),)
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, 2, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2, LANES), jnp.uint8),
+        interpret=interpret,
+    )(p2)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for int4 nibble pack/unpack (wire format for b <= 4).
+
+Wire format: the flat uint8 level stream is zero-padded to a whole number of
+(2*128)-element rows and viewed as (rows, 2, 128); byte r*128+c packs
+lo = elem[r*256 + c] and hi = elem[r*256 + 128 + c].  The strided pairing keeps
+the TPU lane dimension 128-aligned in the kernel; the packed buffer (including
+padding) is what goes over the wire, size 128*ceil(n/256) bytes ~= n/2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LANES = 128
+
+
+def _pad_rows(n: int) -> int:
+    return -(-n // (2 * LANES))
+
+
+def pack4_ref(q: Array) -> Array:
+    """Pack flat uint8 values (< 16) into the strided nibble wire format."""
+    flat = q.reshape(-1)
+    rows = _pad_rows(flat.size)
+    pad = rows * 2 * LANES - flat.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint8)])
+    q3 = flat.reshape(rows, 2, LANES)
+    return (q3[:, 0, :] | (q3[:, 1, :] << 4)).astype(jnp.uint8).reshape(-1)
+
+
+def unpack4_ref(packed: Array, n: int) -> Array:
+    """Inverse of pack4_ref, returning the first n levels."""
+    rows = _pad_rows(n)
+    p2 = packed.reshape(rows, LANES)
+    lo = (p2 & 0xF).astype(jnp.uint8)
+    hi = (p2 >> 4).astype(jnp.uint8)
+    out = jnp.stack([lo, hi], axis=1)  # (rows, 2, 128)
+    return out.reshape(-1)[:n]

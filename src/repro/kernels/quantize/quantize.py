@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused stochastic quantize + dequantize.
+
+The Q-GADMM per-iteration communication hot path touches every parameter:
+read theta and theta_hat_prev, compute level indices with stochastic rounding,
+write the uint8 payload AND the reconstructed theta_hat (sender keeps it so its
+state matches the receiver bit-for-bit).  Unfused, XLA materializes the f32
+intermediates (c, floor, p, compare) in HBM; fused, the op is 3 reads
+(theta, hat, u) + 2 writes (q, hat_new) of which q is 1 byte/elem.
+
+TPU mapping: pure VPU elementwise work tiled in (BLOCK_M, 128) VMEM blocks,
+lane-dim 128-aligned.  Scalars (radius, levels) ride in SMEM via (1,1) blocks.
+Arithmetic intensity is O(1) FLOP/byte => the win is HBM traffic, not MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_M = 256  # sublane-dim block; lane dim fixed at 128
+LANES = 128
+
+
+def _kernel(r_ref, lv_ref, theta_ref, hat_ref, u_ref, q_ref, newhat_ref):
+    radius = r_ref[0, 0]
+    levels = lv_ref[0, 0]
+    x = theta_ref[...].astype(jnp.float32)
+    h = hat_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    safe_r = jnp.maximum(radius, 1e-30)
+    step = 2.0 * safe_r / levels
+    c = (x - h + radius) / step
+    low = jnp.floor(c)
+    p = c - low
+    q = low + (u < p).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, levels)
+    hat = h + step * q - radius
+    active = radius > 0
+    q_ref[...] = jnp.where(active, q, jnp.zeros_like(q)).astype(jnp.uint8)
+    newhat_ref[...] = jnp.where(active, hat, h).astype(newhat_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_dequantize(
+    theta: Array,
+    theta_hat_prev: Array,
+    u: Array,
+    radius: Array,
+    levels: Array,
+    *,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused stochastic quantize-dequantize over an arbitrary-shape tensor.
+
+    See ref.quantize_dequantize_ref for semantics.  interpret=True executes the
+    kernel body in Python on CPU (this container); on TPU pass interpret=False.
+    """
+    orig_shape = theta.shape
+    n = theta.size
+    cols = LANES
+    rows = -(-n // cols)
+    pad = rows * cols - n
+
+    def to2d(x, fill):
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.concatenate([flat, jnp.full((pad,), fill, flat.dtype)])
+        return flat.reshape(rows, cols)
+
+    theta2 = to2d(theta, 0)
+    hat2 = to2d(theta_hat_prev, 0)
+    u2 = to2d(u.astype(jnp.float32), 1.0)  # u=1 never rounds up on padding
+
+    block_m = min(BLOCK_M, rows)
+    grid = (-(-rows // block_m),)
+    r2 = radius.astype(jnp.float32).reshape(1, 1)
+    lv2 = levels.astype(jnp.float32).reshape(1, 1)
+
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((block_m, cols), lambda i: (i, 0))
+    q2, newhat2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, cols), theta_hat_prev.dtype),
+        ],
+        interpret=interpret,
+    )(r2, lv2, theta2, hat2, u2)
+
+    q = q2.reshape(-1)[:n].reshape(orig_shape)
+    newhat = newhat2.reshape(-1)[:n].reshape(orig_shape)
+    return q, newhat

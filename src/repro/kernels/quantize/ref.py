@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused stochastic quantize-dequantize kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_dequantize_ref(
+    theta: Array,
+    theta_hat_prev: Array,
+    u: Array,
+    radius: Array,
+    levels: Array,
+) -> tuple[Array, Array]:
+    """Reference for the fused kernel.
+
+    Args:
+      theta, theta_hat_prev: same-shape float tensors.
+      u: uniform [0,1) random values, same shape (rounding randomness).
+      radius: scalar f32, R = ||theta - theta_hat_prev||_inf (precomputed; in
+        the distributed setting it is an all-reduce-max over the worker group).
+      levels: scalar f32, 2^b - 1.
+
+    Returns:
+      q:        uint8 levels in [0, levels]
+      theta_hat: reconstructed (sender==receiver) new hat, dtype of theta_hat_prev.
+    """
+    x = theta.astype(jnp.float32)
+    h = theta_hat_prev.astype(jnp.float32)
+    safe_r = jnp.maximum(radius, 1e-30)
+    step = 2.0 * safe_r / levels
+    c = (x - h + radius) / step
+    low = jnp.floor(c)
+    p = c - low
+    q = low + (u < p).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, levels)
+    hat = h + step * q - radius
+    hat = jnp.where(radius > 0, hat, h)
+    q = jnp.where(radius > 0, q, jnp.zeros_like(q))
+    return q.astype(jnp.uint8), hat.astype(theta_hat_prev.dtype)

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the intra-chunk SSD kernel with impl dispatch."""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from . import ssd as _kernel
+
+Array = jax.Array
+
+
+def ssd_intra(x: Array, dt: Array, la: Array, b: Array, c: Array,
+              *, impl: str = "pallas") -> Array:
+    """x: (BC, Q, H, P); dt/la: (BC, Q, H); b/c: (BC, Q, N) -> (BC, Q, H, P)."""
+    if impl == "ref":
+        return jax.vmap(_ref.ssd_intra_ref)(x, dt, la, b, c)
+    return _kernel.ssd_intra(x, dt, la, b, c,
+                             interpret=impl != "pallas_compiled")

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the intra-chunk SSD kernel (Mamba2 / SSD duality).
+
+For one chunk of length Q (single head group, G=1):
+
+  scores[t, k] = (C_t . B_k) * exp(la[t,h] - la[k,h]) * dt[k,h]   for k <= t
+  y_intra[t, h] = sum_k scores[t, k, h] * x[k, h, :]
+
+This is the quadratic (attention-like) half of the chunked SSD algorithm;
+the inter-chunk recurrence stays a lax.scan (it is tiny).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_intra_ref(x: Array, dt: Array, la: Array, b: Array, c: Array) -> Array:
+    """x: (Q, H, P); dt, la: (Q, H); b, c: (Q, N).  Returns (Q, H, P) f32."""
+    f32 = jnp.float32
+    x, dt, la, b, c = (t.astype(f32) for t in (x, dt, la, b, c))
+    q = x.shape[0]
+    cb = jnp.einsum("tn,kn->tk", c, b)                      # (Q, Q)
+    seg = la[:, None, :] - la[None, :, :]                   # (Q, K, H)
+    tri = jnp.tril(jnp.ones((q, q), bool))[:, :, None]
+    decay = jnp.exp(jnp.where(tri, seg, -jnp.inf))          # (Q, K, H)
+    w = cb[:, :, None] * decay * dt[None, :, :]             # (Q, K, H)
+    return jnp.einsum("tkh,khp->thp", w, x)

@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and extract the roofline
+terms.  No real allocation: all inputs are ShapeDtypeStructs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch ... --multi-pod
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.gadmm import GADMMConfig
+from repro.core.quantizer import QuantizerConfig
+from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+from repro.dist.serve import Server, cache_specs, serve_view
+from repro.launch import hlo_stats
+from repro.launch.mesh import factor_mesh, make_production_mesh
+from repro.models import registry
+from repro.models.config import num_active_params, num_params
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+# long_500k requires sub-quadratic attention / bounded state (DESIGN.md):
+LONG_OK = {"mamba2-2.7b", "zamba2-2.7b", "gemma3-27b"}
+
+# v5e hardware constants (roofline):
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+
+def pick_workers(arch: str, total_data: int) -> int:
+    """GADMM worker count: as decentralized as memory allows (DESIGN.md)."""
+    n = num_params(registry.get_config(arch))
+    if n > 50e9:
+        return min(2, total_data)
+    if n > 10e9:
+        return min(4, total_data)
+    return min(16, total_data)
+
+
+def input_specs(cfg, shape_name: str, num_workers: int = 0):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    sh = SHAPES[shape_name]
+    seq, batch = sh["seq"], sh["batch"]
+    sds = jax.ShapeDtypeStruct
+    if sh["kind"] == "train":
+        w = num_workers
+        per = batch // w
+        b = {"tokens": sds((w, per, seq), jnp.int32),
+             "labels": sds((w, per, seq), jnp.int32)}
+        if cfg.family == "vlm":
+            b["patches"] = sds((w, per, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            b["frames"] = sds((w, per, cfg.encoder_frames, cfg.d_model),
+                              jnp.float32)
+        return b
+    if sh["kind"] == "prefill":
+        b = {"tokens": sds((batch, seq), jnp.int32)}
+        if cfg.family == "vlm":
+            b["patches"] = sds((batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            b["frames"] = sds((batch, cfg.encoder_frames, cfg.d_model),
+                              jnp.float32)
+        return b
+    # decode: token + pos (+ cache handled separately)
+    return {"token": sds((batch,), jnp.int32),
+            "pos": sds((batch,), jnp.int32)}
+
+
+def _roofline(cost, coll_bytes: float, n_chips: int, cfg, shape_name):
+    """`cost` comes from hlo_stats.hlo_cost (trip-count-aware, per-device
+    partitioned program).  XLA's compiled.cost_analysis counts while-loop
+    bodies ONCE, so it is only printed as a cross-check."""
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes", 0.0)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    # collective bytes parsed per-device program; 1 link assumed busy
+    collective_s = coll_bytes / ICI_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dom = max(terms, key=terms.get)
+    n_active = num_active_params(cfg)
+    sh = SHAPES[shape_name]
+    tokens = sh["batch"] * (sh["seq"] if sh["kind"] != "decode" else 1)
+    if sh["kind"] == "train":
+        model_flops = 6 * n_active * tokens  # fwd + bwd
+    else:
+        model_flops = 2 * n_active * tokens  # fwd only (prefill / decode)
+    total_hlo_flops = flops * n_chips
+    return dict(
+        **terms, dominant=dom,
+        hlo_flops_per_device=flops, hlo_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=coll_bytes,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / total_hlo_flops
+                            if total_hlo_flops else 0.0),
+    )
+
+
+def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
+                 mode: str = "gauss-seidel", workers: int = 0,
+                 quantize: bool = True, local_iters: int = 1,
+                 microbatches: int = 1, verbose: bool = True,
+                 xent: str = "gather", attn_remat: bool = False,
+                 uneven: bool = False, pack: bool = False, bits: int = 8,
+                 seq_shard: bool = False):
+    cfg = registry.get_config(
+        arch, compute_dtype=jnp.bfloat16, param_dtype=jnp.float32,
+        xent_mode=xent, attn_scan_remat=attn_remat,
+        head_pad=16 if uneven else 0)
+    model = registry.get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    total_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    w = workers or pick_workers(arch, total_data)
+    if multi_pod and w < mesh.shape["pod"]:
+        w = mesh.shape["pod"]
+    wmesh = factor_mesh(mesh, w)
+    dcfg = DistConfig(
+        num_workers=w,
+        gadmm=GADMMConfig(rho=1.0, quantize=quantize,
+                          qcfg=QuantizerConfig(bits=bits), alpha=0.01),
+        local_iters=local_iters, microbatches=microbatches, mode=mode,
+        state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
+        seq_shard=seq_shard)
+    trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
+    state_structs = jax.eval_shape(
+        functools.partial(init_state,
+                          lambda k: model.init(k, cfg), dcfg=dcfg),
+        jax.ShapeDtypeStruct((2,), jax.random.PRNGKey(0).dtype))
+    batch_structs = input_specs(cfg, shape_name, num_workers=w)
+    t0 = time.time()
+    jitted = trainer.jit_train_step(state_structs, batch_structs)
+    lowered = jitted.lower(state_structs, batch_structs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return _report(compiled, wmesh, cfg, shape_name, arch,
+                   dict(mode=mode, workers=w, quantize=quantize,
+                        t_lower=t_lower, t_compile=t_compile),
+                   verbose=verbose)
+
+
+def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool,
+                 verbose: bool = True, windowed_cache: bool = False):
+    cfg = registry.get_config(
+        arch, compute_dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+    model = registry.get_model(cfg)
+    sh = SHAPES[shape_name]
+    mesh = serve_view(make_production_mesh(multi_pod=multi_pod))
+    server = Server(model=model, cfg=cfg, mesh=mesh, batch_size=sh["batch"])
+    params = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    t0 = time.time()
+    if sh["kind"] == "prefill":
+        batch = input_specs(cfg, shape_name)
+        jitted = server.jit_prefill(params, batch, sh["batch"])
+        lowered = jitted.lower(params, batch)
+    else:
+        if cfg.family == "ssm":
+            cache = jax.eval_shape(
+                lambda: model.init_cache(cfg, sh["batch"], dtype=jnp.bfloat16))
+        elif (windowed_cache and cfg.family == "dense" and cfg.global_every
+              and cfg.sliding_window):
+            from repro.models import dense as _dense
+
+            cache = jax.eval_shape(
+                lambda: _dense.init_cache_windowed(cfg, sh["batch"], sh["seq"],
+                                                   dtype=jnp.bfloat16))
+        else:
+            cache = jax.eval_shape(
+                lambda: model.init_cache(cfg, sh["batch"], sh["seq"],
+                                         dtype=jnp.bfloat16))
+        io = input_specs(cfg, shape_name)
+        jitted = server.jit_decode(params, cache, sh["batch"],
+                                   seq_parallel=(sh["batch"] == 1))
+        lowered = jitted.lower(params, io["token"], cache, io["pos"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return _report(compiled, mesh, cfg, shape_name, arch,
+                   dict(t_lower=t_lower, t_compile=t_compile),
+                   verbose=verbose)
+
+
+SAVE_HLO_DIR = os.environ.get("REPRO_SAVE_HLO", "")
+
+
+def _report(compiled, mesh, cfg, shape_name, arch, extra, verbose=True):
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception as e:  # pragma: no cover
+        cost = {}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = getattr(ma, k)
+    except Exception:
+        pass
+    text = compiled.as_text()
+    if SAVE_HLO_DIR:
+        import gzip
+
+        os.makedirs(SAVE_HLO_DIR, exist_ok=True)
+        tag = "x".join(str(v) for v in mesh.shape.values())
+        with gzip.open(os.path.join(
+                SAVE_HLO_DIR, f"{arch}_{shape_name}_{tag}.hlo.gz"), "wt") as f:
+            f.write(text)
+    coll = hlo_stats.collective_stats(text)
+    walked = hlo_stats.hlo_cost(text)
+    roof = _roofline(walked, coll.total_bytes, n_chips, cfg, shape_name)
+    result = dict(arch=arch, shape=shape_name, mesh=dict(mesh.shape),
+                  chips=n_chips, collectives=coll.bytes_by_kind,
+                  collective_counts=coll.count_by_kind, memory=mem,
+                  xla_cost_flops=(cost or {}).get("flops", 0.0),
+                  **roof, **extra)
+    if verbose:
+        hbm_need = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+        print(f"== {arch} x {shape_name} on {dict(mesh.shape)} ==")
+        print(f"  lower {extra.get('t_lower', 0):.1f}s  "
+              f"compile {extra.get('t_compile', 0):.1f}s")
+        print(f"  memory_analysis: {mem} (~{hbm_need/1e9:.2f} GB/device)")
+        print(f"  cost_analysis: flops/device={roof['hlo_flops_per_device']:.3e} "
+              f"bytes/device={roof['hlo_bytes_per_device']:.3e}")
+        print(f"  collectives: { {k: f'{v/1e6:.1f}MB' for k, v in coll.bytes_by_kind.items()} }")
+        print(f"  roofline: compute={roof['compute_s']*1e3:.2f}ms "
+              f"memory={roof['memory_s']*1e3:.2f}ms "
+              f"collective={roof['collective_s']*1e3:.2f}ms "
+              f"-> dominant: {roof['dominant']}")
+        print(f"  MODEL_FLOPS/HLO_FLOPS = {roof['useful_flops_ratio']:.3f}")
+    return result
+
+
+def iter_pairs():
+    for arch in registry.ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--mode", default="gauss-seidel")
+    ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument("--local-iters", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--xent", default="onehot", choices=["gather", "onehot"])
+    ap.add_argument("--attn-remat", action="store_true", default=True)
+    ap.add_argument("--no-attn-remat", dest="attn_remat", action="store_false")
+    ap.add_argument("--uneven", action="store_true", default=True,
+                    help="pad non-divisible MHA head counts (exact; masked)")
+    ap.add_argument("--no-uneven", dest="uneven", action="store_false")
+    ap.add_argument("--pack", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual stream (train)")
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--windowed-cache", action="store_true", default=True)
+    ap.add_argument("--no-windowed-cache", dest="windowed_cache",
+                    action="store_false")
+    ap.add_argument("--paper-baseline", action="store_true",
+                    help="disable every §Perf optimization (baseline tables)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.paper_baseline:
+        args.xent, args.attn_remat, args.uneven = "gather", False, False
+        args.windowed_cache = False
+
+    results = []
+    pairs = (list(iter_pairs()) if args.all
+             else [(args.arch, args.shape)])
+    for arch, shape in pairs:
+        kind = SHAPES[shape]["kind"]
+        try:
+            if kind == "train":
+                r = dryrun_train(arch, shape, multi_pod=args.multi_pod,
+                                 mode=args.mode, workers=args.workers,
+                                 quantize=not args.no_quantize,
+                                 local_iters=args.local_iters,
+                                 microbatches=args.microbatches,
+                                 xent=args.xent, attn_remat=args.attn_remat,
+                                 uneven=args.uneven, pack=args.pack,
+                                 bits=args.bits, seq_shard=args.seq_shard)
+            else:
+                r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
+                                 windowed_cache=args.windowed_cache)
+            results.append(r)
+        except Exception as e:
+            print(f"== {arch} x {shape} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            results.append(dict(arch=arch, shape=shape, error=str(e)))
+            if not args.all:
+                raise
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"{ok}/{len(results)} pairs compiled successfully")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,257 @@
+"""Parse compiled HLO text: collective ops, their wire bytes, and loop trip
+counts (collectives inside scan bodies count x trip_count).
+
+Wire-bytes model (per device, per execution of the op):
+  collective-permute: result bytes                      (send == recv)
+  all-to-all:         result bytes
+  all-gather:         result bytes * (g-1)/g  ~ result  (received)
+  all-reduce:         2 * result bytes * (g-1)/g ~ 2x   (ring)
+  reduce-scatter:     result bytes * (g-1)              (sends operand-share)
+where g = replica group size when parseable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*) = ((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*)) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPSZ_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPLIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _computation_blocks(text: str) -> dict:
+    """Split HLO text into named computation bodies."""
+    blocks = {}
+    cur, buf = None, []
+    for line in text.splitlines():
+        m = re.match(r"^(?:ENTRY )?%?([\w.\-]+) (?:\([^)]*\))? ?->.*\{", line)
+        if m is None:
+            m = re.match(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            cur = m.group(1)
+            buf = []
+            blocks[cur] = buf
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                buf.append(line)
+    return blocks
+
+
+def _reach_multipliers(blocks: dict, text: str) -> dict:
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY %?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    edges = defaultdict(list)
+    for name, lines in blocks.items():
+        for line in lines:
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for ref_kind in ("body=", "to_apply=", "calls=", "condition=",
+                             "true_computation=", "false_computation="):
+                for m in re.finditer(ref_kind + r"%?([\w.\-]+)", line):
+                    mult = trip if ref_kind == "body=" else 1
+                    edges[name].append((m.group(1), mult))
+    mults = defaultdict(int)
+    stack = [(entry, 1)] if entry in blocks else [(n, 1) for n in blocks]
+    guard = 0
+    while stack and guard < 200000:
+        guard += 1
+        comp, mult = stack.pop()
+        if comp not in blocks:
+            continue
+        mults[comp] += mult
+        for callee, m in edges.get(comp, []):
+            stack.append((callee, mult * m))
+    return mults
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = "
+                     r"((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*)) (\w[\w\-]*)\(")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy-done", "after-all", "partition-id"}
+
+# HBM-traffic ops: outputs of these hit memory.  Bare elementwise ops
+# (convert/add/select/...) are excluded — on TPU they fuse with a producer or
+# consumer; XLA:CPU leaves many unfused which would overstate traffic ~10x.
+_TRAFFIC_OPS = {"fusion", "dot", "convolution", "dynamic-update-slice",
+                "dynamic-slice", "scatter", "gather", "copy", "copy-start",
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "sort", "reduce", "concatenate", "pad",
+                "transpose", "reshape-and-transpose", "iota-nope"}
+
+
+def hlo_cost(text: str) -> dict:
+    """Trip-count-aware FLOPs/bytes from optimized HLO text.
+
+    flops: 2 * |out| * K for every dot (K = product of lhs contracting dims),
+    scaled by the enclosing computation's reach multiplier (scan bodies count
+    x trip_count — XLA's own cost_analysis counts loop bodies once).
+    bytes: 2 x sum of op output bytes (one write + roughly one read by a
+    consumer) over non-trivial ops, same multipliers.  An approximation, but
+    a consistent one for iterating on the memory term.
+    """
+    blocks = _computation_blocks(text)
+    mults = _reach_multipliers(blocks, text)
+    flops = 0.0
+    bytes_ = 0.0
+    for name, lines in blocks.items():
+        mult = mults.get(name, 0)
+        if mult == 0:
+            continue
+        shapes = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            opname, shape_str, opkind = dm.groups()
+            shapes[opname] = shape_str
+            if opkind in _TRAFFIC_OPS:
+                eff = shape_str
+                if opkind in ("dynamic-update-slice", "scatter"):
+                    # in-place ops only touch the UPDATE region, not the full
+                    # buffer (a scan's residual stack would otherwise count
+                    # trip_count x buffer): use the update operand's shape
+                    # (operand 2 for DUS, operand 3 for scatter).
+                    skip = 2 if opkind == "scatter" else 1
+                    om = re.search(
+                        opkind + r"\(" + r"\s*%?[\w.\-]+,\s*" * skip
+                        + r"%?([\w.\-]+)", line)
+                    if om and om.group(1) in shapes:
+                        eff = shapes[om.group(1)]
+                bytes_ += 2 * _shape_bytes(eff) * mult
+            if opkind == "dot":
+                cd = _DOT_DIMS_RE.search(line)
+                # first operand name
+                om = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+                k = 1
+                if cd and om and om.group(1) in shapes:
+                    lhs_shape = shapes[om.group(1)]
+                    sm = _SHAPE_RE.search(lhs_shape)
+                    if sm and sm.group(2):
+                        dims = [int(x) for x in sm.group(2).split(",")]
+                        for idx in (int(x) for x in cd.group(1).split(",") if x):
+                            if idx < len(dims):
+                                k *= dims[idx]
+                out_elems = 0
+                sm = _SHAPE_RE.search(shape_str)
+                if sm:
+                    n = 1
+                    for d in (sm.group(2).split(",") if sm.group(2) else []):
+                        n *= int(d)
+                    out_elems = n
+                flops += 2.0 * out_elems * k * mult
+    return {"flops": flops, "bytes": bytes_}
+
+
+def collective_stats(text: str, default_group: int = 1) -> CollectiveStats:
+    blocks = _computation_blocks(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY %?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    # call graph with multipliers
+    edges = defaultdict(list)  # comp -> [(callee, mult)]
+    for name, lines in blocks.items():
+        for line in lines:
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for ref_kind in ("body=", "to_apply=", "calls=", "condition=",
+                             "true_computation=", "false_computation="):
+                for m in re.finditer(ref_kind + r"%?([\w.\-]+)", line):
+                    mult = trip if ref_kind == "body=" else 1
+                    edges[name].append((m.group(1), mult))
+
+    # reach multipliers from entry
+    mults = defaultdict(int)
+    stack = [(entry, 1)] if entry in blocks else [(n, 1) for n in blocks]
+    seen_depth = 0
+    while stack and seen_depth < 200000:
+        seen_depth += 1
+        comp, mult = stack.pop()
+        if comp not in blocks:
+            continue
+        mults[comp] += mult
+        for callee, m in edges.get(comp, []):
+            stack.append((callee, mult * m))
+
+    bytes_by_kind = defaultdict(float)
+    count_by_kind = defaultdict(int)
+    for name, lines in blocks.items():
+        mult = mults.get(name, 0)
+        if mult == 0:
+            continue
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            _, shape_str, kind, started = m.groups()
+            if started and "-done" in line:
+                continue
+            size = _shape_bytes(shape_str)
+            g = default_group
+            gm = _GROUPSZ_RE.search(line)
+            if gm:
+                g = max(int(gm.group(2)), 1)
+            else:
+                gl = _GROUPLIST_RE.search(line)
+                if gl:
+                    g = len(gl.group(1).split(","))
+            if kind == "all-reduce":
+                size = 2 * size * (g - 1) / max(g, 1)
+            elif kind == "all-gather":
+                size = size * (g - 1) / max(g, 1)
+            elif kind == "reduce-scatter":
+                size = size * (g - 1)
+            bytes_by_kind[kind] += size * mult
+            count_by_kind[kind] += mult
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind))

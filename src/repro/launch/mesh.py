@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+make_production_mesh is a FUNCTION (importing this module never touches jax
+device state).  The canonical axes are ('data','model') single-pod and
+('pod','data','model') multi-pod; Q-GADMM views the same devices through a
+factored ('worker','fsdp','model') mesh: the worker axis carries the GADMM
+chain (pods fold into it on multi-pod meshes), the fsdp axis shards each
+worker's state, the model axis is tensor/expert parallel.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def factor_mesh(mesh: Mesh, num_workers: int) -> Mesh:
+    """View `mesh` as ('worker','fsdp','model').
+
+    Single-pod (data, model): data = num_workers * fsdp.
+    Multi-pod (pod, data, model): pod*data = num_workers * fsdp, pods are the
+    leading factor of the worker axis (pod boundaries = worker boundaries when
+    num_workers >= n_pods, the flagship cross-pod Q-GADMM configuration).
+    """
+    devices = mesh.devices
+    if devices.ndim == 3:  # (pod, data, model)
+        p, d, m = devices.shape
+        total = p * d
+    else:
+        d, m = devices.shape
+        total = d
+    if total % num_workers:
+        raise ValueError(f"num_workers={num_workers} must divide {total}")
+    fsdp = total // num_workers
+    return Mesh(devices.reshape(num_workers, fsdp, m),
+                ("worker", "fsdp", "model"))
+
+
+def serve_mesh(mesh: Mesh) -> Mesh:
+    """Serving view: ('data','model') with pods folded into data."""
+    devices = mesh.devices
+    if devices.ndim == 3:
+        p, d, m = devices.shape
+        return Mesh(devices.reshape(p * d, m), ("data", "model"))
+    return mesh

@@ -1,0 +1,48 @@
+"""Recompute roofline terms from saved HLO dumps (no recompilation).
+
+  PYTHONPATH=src python -m repro.launch.reanalyze hlo_dir out.json
+"""
+import glob
+import gzip
+import json
+import os
+import re
+import sys
+
+from repro.launch import hlo_stats
+from repro.launch.dryrun import SHAPES, _roofline
+from repro.models import registry
+
+
+def main(argv=None):
+    argv = argv or sys.argv[1:]
+    hlo_dir, out = argv[0], argv[1]
+    results = []
+    for path in sorted(glob.glob(os.path.join(hlo_dir, "*.hlo.gz"))):
+        base = os.path.basename(path)[: -len(".hlo.gz")]
+        m = re.match(r"(.+)_(train_4k|prefill_32k|decode_32k|long_500k)_([\dx]+)$",
+                     base)
+        if not m:
+            continue
+        arch, shape, meshtag = m.groups()
+        chips = 1
+        for v in meshtag.split("x"):
+            chips *= int(v)
+        cfg = registry.get_config(arch)
+        with gzip.open(path, "rt") as f:
+            text = f.read()
+        coll = hlo_stats.collective_stats(text)
+        cost = hlo_stats.hlo_cost(text)
+        roof = _roofline(cost, coll.total_bytes, chips, cfg, shape)
+        results.append(dict(arch=arch, shape=shape, mesh=meshtag, chips=chips,
+                            collectives=coll.bytes_by_kind, **roof))
+        print(f"{arch} x {shape} [{meshtag}]: dominant={roof['dominant']} "
+              f"c={roof['compute_s']*1e3:.1f}ms m={roof['memory_s']*1e3:.1f}ms "
+              f"x={roof['collective_s']*1e3:.1f}ms useful={roof['useful_flops_ratio']:.3f}")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"wrote {out} ({len(results)} entries)")
+
+
+if __name__ == "__main__":
+    main()

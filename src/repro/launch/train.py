@@ -1,0 +1,121 @@
+"""End-to-end decentralized training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
+      --steps 50 --workers 4 --devices 8
+
+On CPU (this container) use --smoke + --devices N to emulate an N-chip mesh;
+on real hardware drop --devices and the production mesh is used.
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU emulation)")
+    ap.add_argument("--per-worker-batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--rho", type=float, default=1.0)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument("--local-iters", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mode", default="gauss-seidel",
+                    choices=["gauss-seidel", "jacobi"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.gadmm import GADMMConfig
+    from repro.core.quantizer import QuantizerConfig
+    from repro.data.pipeline import ExtraInputs, LMShardLoader
+    from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+    from repro.launch.mesh import factor_mesh, make_production_mesh
+    from repro.models import registry
+    from repro.train import checkpoint
+
+    devices = np.array(jax.devices())
+    if args.devices:
+        model_par = max(1, args.devices // (args.workers * 1))
+        # simple (data, model) grid for emulation
+        d = args.workers
+        m = args.devices // d
+        mesh = Mesh(devices[: d * m].reshape(d, m), ("data", "model"))
+    else:
+        mesh = make_production_mesh()
+    wmesh = factor_mesh(mesh, args.workers)
+    print(f"mesh: {dict(wmesh.shape)}")
+
+    cfg = registry.get_config(args.arch, smoke=args.smoke)
+    model = registry.get_model(cfg)
+    dcfg = DistConfig(
+        num_workers=args.workers,
+        gadmm=GADMMConfig(rho=args.rho, quantize=not args.no_quantize,
+                          qcfg=QuantizerConfig(bits=args.bits), alpha=0.01),
+        local_iters=args.local_iters, local_lr=args.lr, mode=args.mode)
+    trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
+
+    loader = LMShardLoader(args.workers, args.per_worker_batch, args.seq,
+                           cfg.vocab)
+
+    def add_extras(b):
+        if cfg.family == "vlm":
+            b["patches"] = ExtraInputs.patches(
+                args.workers, args.per_worker_batch, cfg.n_patches, cfg.d_model)
+        if cfg.family == "audio":
+            b["frames"] = ExtraInputs.frames(
+                args.workers, args.per_worker_batch, cfg.encoder_frames,
+                cfg.d_model)
+        return b
+
+    state = init_state(lambda k: model.init(k, cfg), jax.random.PRNGKey(0),
+                       dcfg)
+    batch0 = add_extras(loader.next_batch())
+    state, _ = trainer.place(state, batch0)
+    step_fn = trainer.jit_train_step(state, batch0)
+
+    start = 0
+    if args.ckpt_dir and (s := checkpoint.latest_step(args.ckpt_dir)) is not None:
+        state = checkpoint.restore(args.ckpt_dir, s, state)
+        state, _ = trainer.place(state, batch0)
+        start = s
+        print(f"restored step {s}")
+
+    import time
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = add_extras(loader.next_batch())
+        batch = jax.device_put(batch, jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(wmesh, s),
+            trainer.batch_specs(batch),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            print(f"step {step + 1}: loss={float(metrics['loss']):.4f} "
+                  f"resid={float(metrics['consensus_resid']):.4f} "
+                  f"R={float(metrics['radius_mean']):.5f} "
+                  f"({(time.time() - t0) / (step - start + 1):.2f}s/step)")
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, step + 1, state)
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,168 @@
+"""Architecture configuration shared by every model family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0
+    shared_expert_ff: int = 0     # 0 => no shared expert
+    moe_every: int = 1            # 1 => every layer is MoE; 2 => alternate dense/MoE
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    n_groups: int = 1
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    activation: str = "silu"      # silu (gated) | relu2 (squared relu) | gelu
+    rope_theta: float = 1e6
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # sliding window: per-layer pattern. window 0 => full attention.
+    sliding_window: int = 0
+    global_every: int = 0         # gemma3: 1 global layer every N (others local)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0           # zamba2: shared attention block every N ssm layers
+    # enc-dec (audio): encoder frames arrive pre-embedded (conv frontend stub)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500
+    # vlm: patch embeddings arrive pre-projected (vision tower stub)
+    n_patches: int = 0
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    attn_q_block: int = 1024      # query-block size for flash-style attention
+    remat: bool = True            # checkpoint each block in training
+    scan_layers: bool = True
+    # --- perf toggles (see EXPERIMENTS.md §Perf; defaults = paper baseline) ---
+    attn_scan_remat: bool = False  # rematerialize per-q-block scores in bwd
+    xent_mode: str = "gather"      # 'gather' | 'onehot' (vocab-sharded safe)
+    head_pad: int = 0              # pad MHA head count up to a multiple of
+                                   # this (16 = model axis) so heads shard;
+                                   # padded heads are output-masked (exact).
+                                   # Applied only when n_heads == n_kv_heads.
+
+    def padded_heads(self) -> int:
+        h = self.n_heads
+        if (self.head_pad and self.n_heads == self.n_kv_heads
+                and h % self.head_pad):
+            return -(-h // self.head_pad) * self.head_pad
+        return h
+
+    def padded_kv_heads(self) -> int:
+        if self.padded_heads() != self.n_heads:
+            return self.padded_heads()
+        return self.n_kv_heads
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def window_for_layer(self, layer: int) -> int:
+        """0 = full attention; >0 = causal sliding window size."""
+        if self.global_every and (layer + 1) % self.global_every != 0:
+            return self.sliding_window
+        if self.global_every:
+            return 0
+        return self.sliding_window
+
+    def supports_long_context(self) -> bool:
+        """Can this arch decode at 500k+ without a quadratic/full KV path?"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # dense with sliding window on most layers (gemma3 5:1)
+        return bool(self.sliding_window and self.global_every)
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs are (or contain) decoders
+
+
+def num_params(cfg: ArchConfig) -> int:
+    """Analytic parameter count (matches init shapes; used for 6ND roofline)."""
+    d = cfg.d_model
+    dh = cfg.dh if cfg.n_heads else 0
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    attn = d * (cfg.n_heads * dh) + 2 * d * (cfg.n_kv_heads * dh) + (cfg.n_heads * dh) * d
+    if cfg.qkv_bias:
+        attn += (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+    def mlp_params(ff, act):
+        return d * ff * (3 if act == "silu" else 2)
+    total = emb
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn + mlp_params(cfg.d_ff, cfg.activation) + 2 * d)
+    elif cfg.family == "moe":
+        m = cfg.moe
+        expert = mlp_params(m.d_ff_expert, cfg.activation)
+        moe_layer = attn + m.num_experts * expert + d * m.num_experts + 2 * d
+        if m.shared_expert_ff:
+            moe_layer += mlp_params(m.shared_expert_ff, cfg.activation)
+        n_moe = cfg.n_layers // m.moe_every
+        n_dense = cfg.n_layers - n_moe
+        total += n_moe * moe_layer
+        total += n_dense * (attn + mlp_params(cfg.d_ff, cfg.activation) + 2 * d)
+    elif cfg.family == "ssm":
+        total += cfg.n_layers * _mamba_params(cfg)
+    elif cfg.family == "hybrid":
+        total += cfg.n_layers * _mamba_params(cfg)
+        total += attn + mlp_params(cfg.d_ff, cfg.activation) + 2 * d  # shared block
+    elif cfg.family == "audio":
+        enc_layer = attn + mlp_params(cfg.d_ff, "gelu") + 2 * d
+        dec_layer = 2 * attn + mlp_params(cfg.d_ff, "gelu") + 3 * d  # self+cross
+        total += cfg.encoder_layers * enc_layer + cfg.n_layers * dec_layer
+    return total
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.state_dim
+    in_proj = d * (2 * di + 2 * s.n_groups * s.state_dim + nh)
+    return in_proj + conv_ch * s.conv_width + nh * 2 + di + di * d + d
+
+
+def num_active_params(cfg: ArchConfig) -> int:
+    """Active (per-token) parameters — MoE counts only top_k experts."""
+    if cfg.family != "moe":
+        return num_params(cfg)
+    m = cfg.moe
+    d = cfg.d_model
+    expert = d * m.d_ff_expert * (3 if cfg.activation == "silu" else 2)
+    total = num_params(cfg)
+    n_moe = cfg.n_layers // m.moe_every
+    total -= n_moe * (m.num_experts - m.top_k) * expert
+    return total

@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder (audio backbone, arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor frontend is STUBBED per the
+brief: `input_specs` / the data pipeline supply pre-computed frame embeddings
+(B, T_enc, d).  This module implements everything downstream: sinusoidal
+positions, bidirectional encoder, causal decoder with cross-attention,
+KV-cached decode (self-attn cache; cross K/V computed once at prefill).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+
+Array = jax.Array
+
+
+def _sinusoid(seq: int, d: int) -> Array:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _stack(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "encoder": {
+            "attn": _stack(ks[1], cfg.encoder_layers, lambda k: L.init_attn(k, cfg)),
+            "mlp": _stack(ks[2], cfg.encoder_layers,
+                          lambda k: L.init_mlp(k, d, cfg.d_ff, "gelu",
+                                               cfg.param_dtype)),
+            "ln1": jnp.zeros((cfg.encoder_layers, d), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.encoder_layers, d), cfg.param_dtype),
+        },
+        "enc_ln_f": jnp.zeros((d,), cfg.param_dtype),
+        "decoder": {
+            "attn": _stack(ks[3], cfg.n_layers, lambda k: L.init_attn(k, cfg)),
+            "xattn": _stack(ks[4], cfg.n_layers, lambda k: L.init_attn(k, cfg)),
+            "mlp": _stack(ks[5], cfg.n_layers,
+                          lambda k: L.init_mlp(k, d, cfg.d_ff, "gelu",
+                                               cfg.param_dtype)),
+            "ln1": jnp.zeros((cfg.n_layers, d), cfg.param_dtype),
+            "lnx": jnp.zeros((cfg.n_layers, d), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.n_layers, d), cfg.param_dtype),
+        },
+    }
+
+
+def encode(params: dict, frames: Array, cfg: ArchConfig) -> Array:
+    """frames: (B, T_enc, d) pre-embedded (conv frontend stub)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, blk):
+        h = L.rmsnorm(x, blk["ln1"], cfg.rms_eps)
+        # bidirectional: no causal mask -> use cross_attention on itself
+        x = x + L.cross_attention(blk["attn"], h, h, cfg)
+        h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+        x = x + L.mlp(blk["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(x, params["enc_ln_f"], cfg.rms_eps)
+
+
+def decode_train(params: dict, enc: Array, tokens: Array, cfg: ArchConfig) -> Array:
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, blk):
+        def f(x):
+            h = L.rmsnorm(x, blk["ln1"], cfg.rms_eps)
+            x = x + L.attention(blk["attn"], h, cfg, positions)
+            h = L.rmsnorm(x, blk["lnx"], cfg.rms_eps)
+            x = x + L.cross_attention(blk["xattn"], h, enc, cfg)
+            h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+            return x + L.mlp(blk["mlp"], h, "gelu")
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(x), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return x
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    enc = encode(params, batch["frames"], cfg)
+    x = decode_train(params, enc, batch["tokens"], cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return L.softmax_xent(logits, batch["labels"], mode=cfg.xent_mode)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.padded_kv_heads(), cfg.dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.padded_kv_heads(), cfg.dh), dtype),
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.encoder_frames,
+                         cfg.padded_kv_heads(), cfg.dh), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.encoder_frames,
+                         cfg.padded_kv_heads(), cfg.dh), dtype),
+    }
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig):
+    """Encode frames + run decoder prompt; returns (logits, cache)."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, blk):
+        h = L.rmsnorm(x, blk["ln1"], cfg.rms_eps)
+        q, k, v = L._qkv(blk["attn"], h, cfg, positions)
+        out = L._sdpa_blocked(q, k, v, positions, positions, 0, cfg.attn_q_block)
+        x = x + L.proj_out(blk["attn"], out, cfg)
+        h = L.rmsnorm(x, blk["lnx"], cfg.rms_eps)
+        xk = jnp.einsum("bsd,dhk->bshk", enc, blk["xattn"]["wk"].astype(x.dtype))
+        xv = jnp.einsum("bsd,dhk->bshk", enc, blk["xattn"]["wv"].astype(x.dtype))
+        x = x + L.cross_attention(blk["xattn"], h, enc, cfg)
+        h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+        x = x + L.mlp(blk["mlp"], h, "gelu")
+        return x, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["decoder"])
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+
+def decode_step(params: dict, token: Array, cache: dict, pos: Array,
+                cfg: ArchConfig):
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, inp):
+        blk, ck, cv, xk, xv = inp
+        h = L.rmsnorm(x, blk["ln1"], cfg.rms_eps)
+        out, ck, cv = L.attention_decode(blk["attn"], h, cfg, ck, cv, pos)
+        x = x + out
+        h = L.rmsnorm(x, blk["lnx"], cfg.rms_eps)
+        # cross-attn against precomputed enc K/V
+        q = jnp.einsum("bsd,dhk->bshk", h, blk["xattn"]["wq"].astype(x.dtype))
+        kvh = xk.shape[2]
+        groups = q.shape[2] // kvh
+        qg = q.reshape(q.shape[0], 1, kvh, groups, cfg.dh)
+        lg = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        xk.astype(jnp.float32)) / jnp.sqrt(cfg.dh)
+        w = jax.nn.softmax(lg, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(xv.dtype), xv)
+        out = out.reshape(q.shape[0], 1, -1, cfg.dh)
+        x = x + L.proj_out(blk["xattn"], out, cfg)
+        h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+        x = x + L.mlp(blk["mlp"], h, "gelu")
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"]))
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

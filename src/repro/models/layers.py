@@ -1,0 +1,343 @@
+"""Shared layer primitives: RMSNorm, RoPE, GQA attention (full / windowed /
+flash-style query-blocked / decode-with-cache), MLP variants, embeddings.
+
+All functions are pure jnp and GSPMD-friendly (no explicit collectives;
+sharding comes from pjit annotations on the inputs/params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Array = jax.Array
+NEG_INF = -1e30
+
+# Activation-sharding context: the trainer/server install a NamedSharding for
+# the residual stream (batch dims sharded, d replicated).  One constraint at
+# the embedding output seeds GSPMD propagation — without it a d-sharded embed
+# table leaks a d-sharded residual stream into every layer (per-layer
+# all-reduces of full activations; see EXPERIMENTS.md §Perf pair 1).
+_ACT_SHARDING = None
+
+
+def set_activation_sharding(sharding) -> None:
+    global _ACT_SHARDING
+    _ACT_SHARDING = sharding
+
+
+def constrain_act(x: Array) -> Array:
+    if _ACT_SHARDING is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SHARDING)
+
+
+# ----------------------------------------------------------------- norms ----
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ------------------------------------------------------------------ rope ----
+def rope_freqs(dh: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, Dh), positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # (B, S, 1, Dh/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ----
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    dh: int
+
+
+def init_attn(key: Array, cfg: ArchConfig) -> dict:
+    d, dh = cfg.d_model, cfg.dh
+    h, kvh = cfg.padded_heads(), cfg.padded_kv_heads()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h, dh)) * s).astype(cfg.param_dtype),
+        "wk": (jax.random.normal(k2, (d, kvh, dh)) * s).astype(cfg.param_dtype),
+        "wv": (jax.random.normal(k3, (d, kvh, dh)) * s).astype(cfg.param_dtype),
+        "wo": (jax.random.normal(k4, (h, dh, d)) * s).astype(cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), cfg.param_dtype)
+        p["bk"] = jnp.zeros((kvh, dh), cfg.param_dtype)
+        p["bv"] = jnp.zeros((kvh, dh), cfg.param_dtype)
+    return p
+
+
+def head_mask(cfg: ArchConfig, h: int) -> Array | None:
+    """(H',) 0/1 mask killing padded heads' outputs (exactness under head
+    padding: masked heads contribute nothing and receive no gradients)."""
+    if h == cfg.n_heads:
+        return None
+    return (jnp.arange(h) < cfg.n_heads).astype(jnp.float32)
+
+
+def proj_out(p: dict, out: Array, cfg: ArchConfig) -> Array:
+    """Output projection with padded-head masking. out: (B, S, H', Dh)."""
+    m = head_mask(cfg, out.shape[-2])
+    if m is not None:
+        out = out * m[None, None, :, None].astype(out.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+def _qkv(p: dict, x: Array, cfg: ArchConfig, positions: Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_blocked(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                  window, q_block: int, scan_remat: bool = False) -> Array:
+    """Flash-style attention: scan over query blocks with full K/V per block.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, KVH, Dh).  Causal via positions; optional
+    sliding window (0/None = full).  Peak temp is (B, H, q_block, Sk) instead
+    of (B, H, Sq, Sk).
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qb = min(q_block, sq)
+    n_blocks = -(-sq // qb)
+    pad = n_blocks * qb - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qs = q.reshape(b, n_blocks, qb, h, dh).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(b, n_blocks, qb).transpose(1, 0, 2)
+
+    kk = k.reshape(b, -1, kvh, 1, dh)
+    vv = v.reshape(b, -1, kvh, 1, dh)
+
+    # window is 0 (full) or a size; may be a traced per-layer scalar under scan
+    eff_window = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                           jnp.iinfo(jnp.int32).max)
+
+    def body(carry, inp):
+        qi, qpi = inp  # (B, qb, H, Dh), (B, qb)
+        qi = qi.reshape(b, qb, kvh, groups, dh)
+        logits = jnp.einsum("bqkgd,bskxd->bkgqs", qi.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * scale
+        delta = qpi[:, None, None, :, None] - k_pos[:, None, None, None, :]
+        mask = (delta >= 0) & (delta < eff_window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bskxd->bqkgd", w.astype(vv.dtype), vv)
+        return carry, out.reshape(b, qb, h, dh)
+
+    if n_blocks == 1:
+        _, out = body(None, (qs[0], qps[0]))
+        outs = out[None]
+    else:
+        # scan_remat: recompute each block's (qb x Sk) scores in the backward
+        # pass instead of saving them as AD residuals — drops the dominant
+        # f32 scores buffer from activation memory (flash-attention-style).
+        b_fn = jax.checkpoint(body) if scan_remat else body
+        _, outs = jax.lax.scan(b_fn, None, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * qb, h, dh)
+    return out[:, :sq]
+
+
+def attention(p: dict, x: Array, cfg: ArchConfig, positions: Array,
+              window: int | Array = 0) -> Array:
+    """Training / prefill self-attention (causal, optional sliding window)."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _sdpa_blocked(q, k, v, positions, positions, window,
+                        cfg.attn_q_block, scan_remat=cfg.attn_scan_remat)
+    return proj_out(p, out, cfg)
+
+
+def attention_decode(p: dict, x: Array, cfg: ArchConfig, cache_k: Array,
+                     cache_v: Array, pos: Array, window: int | Array = 0):
+    """One-token decode: x (B, 1, d); cache_{k,v} (B, S, KVH, Dh); pos (B,).
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    b, s, kvh, dh = cache_k.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # scatter new kv at pos (dynamic per batch): one-hot to stay pjit-friendly
+    onehot = (jnp.arange(s)[None, :] == pos[:, None]).astype(cache_k.dtype)
+    cache_k = cache_k * (1 - onehot[..., None, None]) + onehot[..., None, None] * k
+    cache_v = cache_v * (1 - onehot[..., None, None]) + onehot[..., None, None] * v
+    h = q.shape[2]  # may exceed cfg.n_heads under head padding
+    groups = h // kvh
+    qg = q.reshape(b, 1, kvh, groups, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / jnp.sqrt(dh)
+    kpos = jnp.arange(s)[None, :]
+    eff_window = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                           jnp.iinfo(jnp.int32).max)
+    delta = pos[:, None] - kpos
+    mask = (delta >= 0) & (delta < eff_window)
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(cache_v.dtype), cache_v)
+    out = out.reshape(b, 1, h, dh)
+    return proj_out(p, out, cfg), cache_k, cache_v
+
+
+def attention_decode_ring(p: dict, x: Array, cfg: ArchConfig, cache_k: Array,
+                          cache_v: Array, pos: Array):
+    """One-token decode against a RING buffer of the last `win` positions
+    (sliding-window layers: cache is win slots, slot = pos % win).
+
+    Exact match with attention_decode+window masking as long as win >= the
+    layer's sliding window.  Keys carry absolute-position RoPE; attention is
+    permutation-invariant over slots so ring order needs no unrotation.
+    """
+    b, win, kvh, dh = cache_k.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % win
+    onehot = (jnp.arange(win)[None, :] == slot[:, None]).astype(cache_k.dtype)
+    cache_k = cache_k * (1 - onehot[..., None, None]) + onehot[..., None, None] * k
+    cache_v = cache_v * (1 - onehot[..., None, None]) + onehot[..., None, None] * v
+    h = q.shape[2]  # may exceed cfg.n_heads under head padding
+    groups = h // kvh
+    qg = q.reshape(b, 1, kvh, groups, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) / jnp.sqrt(dh)
+    valid = jnp.arange(win)[None, :] < jnp.minimum(pos[:, None] + 1, win)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(cache_v.dtype), cache_v)
+    out = out.reshape(b, 1, h, dh)
+    return proj_out(p, out, cfg), cache_k, cache_v
+
+
+def cross_attention(p: dict, x: Array, enc: Array, cfg: ArchConfig) -> Array:
+    """Enc-dec cross attention (no rope, no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"].astype(x.dtype))
+    kvh, h = k.shape[2], q.shape[2]
+    groups = h // kvh
+    b, sq, _, dh = q.shape
+    qg = q.reshape(b, sq, kvh, groups, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v).reshape(b, sq, h, dh)
+    return proj_out(p, out, cfg)
+
+
+# ------------------------------------------------------------------- mlp ----
+def init_mlp(key: Array, d: int, ff: int, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(ff)
+    p = {"w_up": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(ks[1], (ff, d)) * s_out).astype(dtype)}
+    if activation == "silu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(p: dict, x: Array, activation: str) -> Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    if activation == "silu":
+        up = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif activation == "relu2":
+        up = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        up = jax.nn.gelu(up)
+    else:
+        raise ValueError(activation)
+    return up @ p["w_down"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ----
+def init_embed(key: Array, cfg: ArchConfig) -> dict:
+    """Untied tables are named 'tok' (sharded on d: a gather over an
+    unsharded vocab dim keeps the batch sharding of its output — a gather
+    over a sharded vocab dim makes GSPMD replicate everything downstream).
+    Tied tables ('tok_tied') shard on vocab for the unembed matmul."""
+    k1, k2 = jax.random.split(key)
+    table = (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+             ).astype(cfg.param_dtype)
+    p = {"ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    if cfg.tie_embeddings:
+        p["tok_tied"] = table
+    else:
+        p["tok"] = table
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab)) * 0.02
+                        ).astype(cfg.param_dtype)
+    return p
+
+
+def _tok_table(p: dict) -> Array:
+    return p["tok_tied"] if "tok_tied" in p else p["tok"]
+
+
+def embed(p: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    x = jnp.take(_tok_table(p), tokens, axis=0).astype(cfg.compute_dtype)
+    return constrain_act(x)
+
+
+def unembed(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    x = rmsnorm(x, p["ln_f"], cfg.rms_eps)
+    w = p["unembed"] if "unembed" in p else _tok_table(p).T
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def softmax_xent(logits: Array, labels: Array, mode: str = "gather") -> Array:
+    if mode == "onehot":
+        # vocab-sharding-safe: no take_along_axis over the sharded V dim
+        # (which GSPMD turns into a full logits all-gather).  The masked sum
+        # reduces over the sharded dim -> one tiny psum of (B, S).
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        v = logits.shape[-1]
+        onehot = labels[..., None] == jnp.arange(v)[None, None, :]
+        picked = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+        return jnp.mean(lse - picked)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

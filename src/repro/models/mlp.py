@@ -1,0 +1,44 @@
+"""The paper's DNN: 3-layer MLP (784 -> 128 -> 64 -> 10), ReLU, softmax-CE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LAYERS = [(784, 128), (128, 64), (64, 10)]
+
+
+def init_params(key: Array, layers=None) -> dict:
+    layers = layers or LAYERS
+    params = {}
+    keys = jax.random.split(key, len(layers))
+    for i, ((fan_in, fan_out), k) in enumerate(zip(layers, keys)):
+        params[f"w{i}"] = jax.random.normal(k, (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        params[f"b{i}"] = jnp.zeros((fan_out,))
+    return params
+
+
+def apply(params: dict, x: Array) -> Array:
+    n_layers = len([k for k in params if k.startswith("w")])
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params: dict, x: Array, y: Array) -> Array:
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(params: dict, x: Array, y: Array) -> Array:
+    return jnp.mean((jnp.argmax(apply(params, x), axis=-1) == y).astype(jnp.float32))
+
+
+def num_params(layers=None) -> int:
+    layers = layers or LAYERS
+    return sum(i * o + o for i, o in layers)

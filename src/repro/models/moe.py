@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded sort-based dispatch.
+
+Design (TPU-native, GSPMD-friendly):
+  * tokens are processed in independent dispatch groups (the leading batch/
+    shard dim), so routing state never crosses the data sharding boundary;
+  * within a group, slots are assigned to experts by a stable sort of expert
+    ids (O(N log N) int ops, no (tokens x experts) one-hot matmuls and none of
+    their fake FLOPs);
+  * each expert processes a fixed capacity C = ceil(T/E * k * capacity_factor)
+    of slots — overflow drops (standard Switch/Mixtral semantics);
+  * expert weights are stacked (E, d, ff) and meant to be sharded over the
+    'model' mesh axis (expert parallelism).  The dispatch buffer is sliced
+    along E by GSPMD for free (it's replicated across 'model' post-scatter),
+    and the combine scatter-add produces partial token outputs that XLA
+    reduces across the model axis.
+  * aux losses: load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MoEConfig
+
+Array = jax.Array
+
+
+def init_moe(key: Array, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, ff = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.num_experts)) * s_in
+                   ).astype(cfg.param_dtype),
+        "w_up": (jax.random.normal(ks[1], (m.num_experts, d, ff)) * s_in
+                 ).astype(cfg.param_dtype),
+        "w_down": (jax.random.normal(ks[2], (m.num_experts, ff, d)) * s_out
+                   ).astype(cfg.param_dtype),
+    }
+    if cfg.activation == "silu":
+        p["w_gate"] = (jax.random.normal(ks[3], (m.num_experts, d, ff)) * s_in
+                       ).astype(cfg.param_dtype)
+    if m.shared_expert_ff:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d, m.shared_expert_ff, cfg.activation,
+                               cfg.param_dtype)
+    return p
+
+
+def _dispatch_group(x: Array, expert_ids: Array, gates: Array, capacity: int,
+                    num_experts: int):
+    """One dispatch group.  x: (T, d); expert_ids/gates: (T, k).
+
+    Returns (buffer (E*C, d), dest (T*k,), keep (T*k,), tok (T*k,), gate (T*k,)).
+    """
+    t, k = expert_ids.shape
+    n = t * k
+    ids = expert_ids.reshape(n)
+    tok = jnp.repeat(jnp.arange(t), k)
+    g = gates.reshape(n)
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(num_experts), side="left")
+    rank = jnp.arange(n) - starts[sorted_ids]
+    keep = rank < capacity
+    dest = jnp.where(keep, sorted_ids * capacity + jnp.clip(rank, 0, capacity - 1), 0)
+    buffer = jnp.zeros((num_experts * capacity, x.shape[-1]), x.dtype)
+    src = x[tok[order]]
+    src = jnp.where(keep[:, None], src, 0)
+    buffer = buffer.at[dest].add(src)  # add: dropped slots all alias dest 0 with 0 value
+    return buffer, dest, keep, tok[order], g[order]
+
+
+def moe_apply(p: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)  # (B, S, k)
+    gates = top_p / jnp.clip(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # aux losses
+    density = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    frac = jnp.mean(jax.nn.one_hot(top_ids[..., 0], e), axis=(0, 1))
+    lb_loss = e * jnp.sum(density * frac) * m.load_balance_coef
+    z_loss = m.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    capacity = max(int(s * k * m.capacity_factor / e), 1)
+
+    def per_group(xg, idg, gg):
+        buf, dest, keep, tok, gate = _dispatch_group(xg, idg, gg, capacity, e)
+        buf = buf.reshape(e, capacity, d)
+        up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+        if "w_gate" in p:
+            gt = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+            up = jax.nn.silu(gt) * up
+        elif cfg.activation == "relu2":
+            up = jnp.square(jax.nn.relu(up))
+        else:
+            up = jax.nn.gelu(up)
+        out_buf = jnp.einsum("ecf,efd->ecd", up, p["w_down"].astype(buf.dtype))
+        out_buf = out_buf.reshape(e * capacity, d)
+        contrib = out_buf[dest] * (gate * keep)[:, None].astype(buf.dtype)
+        out = jnp.zeros((xg.shape[0], d), x.dtype).at[tok].add(contrib)
+        return out
+
+    out = jax.vmap(per_group)(x, top_ids, gates)
+    if "shared" in p:
+        from .layers import mlp
+
+        out = out + mlp(p["shared"], x, cfg.activation)
+    return out, lb_loss + z_loss

@@ -1,0 +1,188 @@
+"""MoE decoder LMs: qwen3-moe (every layer MoE, top-8) and
+llama4-maverick (alternating dense/MoE, top-1 + shared expert)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from .moe import init_moe, moe_apply
+
+Array = jax.Array
+
+
+def _stack(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init(key: Array, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    keys = jax.random.split(key, 8)
+    params = {"embed": L.init_embed(keys[0], cfg)}
+    if m.moe_every == 1:
+        params["blocks"] = {
+            "attn": _stack(keys[1], cfg.n_layers, lambda k: L.init_attn(k, cfg)),
+            "moe": _stack(keys[2], cfg.n_layers, lambda k: init_moe(k, cfg)),
+            "ln1": jnp.zeros((cfg.n_layers, cfg.d_model), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.n_layers, cfg.d_model), cfg.param_dtype),
+        }
+    else:
+        assert m.moe_every == 2 and cfg.n_layers % 2 == 0
+        pairs = cfg.n_layers // 2
+        params["blocks"] = {
+            "attn_d": _stack(keys[1], pairs, lambda k: L.init_attn(k, cfg)),
+            "mlp": _stack(keys[2], pairs,
+                          lambda k: L.init_mlp(k, cfg.d_model, cfg.d_ff,
+                                               cfg.activation, cfg.param_dtype)),
+            "attn_m": _stack(keys[3], pairs, lambda k: L.init_attn(k, cfg)),
+            "moe": _stack(keys[4], pairs, lambda k: init_moe(k, cfg)),
+            "ln": jnp.zeros((pairs, 4, cfg.d_model), cfg.param_dtype),
+        }
+    return params
+
+
+def _moe_block(x, attn_p, moe_p, ln1, ln2, cfg, positions):
+    h = L.rmsnorm(x, ln1, cfg.rms_eps)
+    x = x + L.attention(attn_p, h, cfg, positions, window=0)
+    h = L.rmsnorm(x, ln2, cfg.rms_eps)
+    out, aux = moe_apply(moe_p, h, cfg)
+    return x + out, aux
+
+
+def _dense_block(x, attn_p, mlp_p, ln1, ln2, cfg, positions):
+    h = L.rmsnorm(x, ln1, cfg.rms_eps)
+    x = x + L.attention(attn_p, h, cfg, positions, window=0)
+    h = L.rmsnorm(x, ln2, cfg.rms_eps)
+    return x + L.mlp(mlp_p, h, cfg.activation)
+
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    blocks = params["blocks"]
+    m = cfg.moe
+
+    if m.moe_every == 1:
+        def body(carry, blk):
+            x, aux = carry
+            def f(x):
+                return _moe_block(x, blk["attn"], blk["moe"], blk["ln1"],
+                                  blk["ln2"], cfg, positions)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            x, a = f(x)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    else:
+        def body(carry, blk):
+            x, aux = carry
+            def f(x):
+                x = _dense_block(x, blk["attn_d"], blk["mlp"], blk["ln"][0],
+                                 blk["ln"][1], cfg, positions)
+                return _moe_block(x, blk["attn_m"], blk["moe"], blk["ln"][2],
+                                  blk["ln"][3], cfg, positions)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            x, a = f(x)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    x, aux = forward(params, batch["tokens"], cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return L.softmax_xent(logits, batch["labels"], mode=cfg.xent_mode) + aux
+
+
+# ------------------------------------------------------------- serving ------
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.padded_kv_heads(), cfg.dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _split_cache(cache, cfg):
+    """(L, ...) caches -> per-scan-step layout."""
+    m = cfg.moe
+    if m.moe_every == 1:
+        return cache["k"], cache["v"]
+    pairs = cfg.n_layers // 2
+    k = cache["k"].reshape(pairs, 2, *cache["k"].shape[1:])
+    v = cache["v"].reshape(pairs, 2, *cache["v"].shape[1:])
+    return k, v
+
+
+def prefill(params: dict, tokens: Array, cfg: ArchConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    blocks = params["blocks"]
+    m = cfg.moe
+
+    def attn_cache(attn_p, x, ln, cfg):
+        h = L.rmsnorm(x, ln, cfg.rms_eps)
+        q, k, v = L._qkv(attn_p, h, cfg, positions)
+        out = L._sdpa_blocked(q, k, v, positions, positions, 0, cfg.attn_q_block)
+        return x + jnp.einsum("bshk,hkd->bsd", out,
+                              attn_p["wo"].astype(x.dtype)), k, v
+
+    if m.moe_every == 1:
+        def body(x, blk):
+            x, k, v = attn_cache(blk["attn"], x, blk["ln1"], cfg)
+            h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+            out, _ = moe_apply(blk["moe"], h, cfg)
+            return x + out, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, blocks)
+    else:
+        def body(x, blk):
+            x, k1, v1 = attn_cache(blk["attn_d"], x, blk["ln"][0], cfg)
+            h = L.rmsnorm(x, blk["ln"][1], cfg.rms_eps)
+            x = x + L.mlp(blk["mlp"], h, cfg.activation)
+            x, k2, v2 = attn_cache(blk["attn_m"], x, blk["ln"][2], cfg)
+            h = L.rmsnorm(x, blk["ln"][3], cfg.rms_eps)
+            out, _ = moe_apply(blk["moe"], h, cfg)
+            return x + out, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        x, (ks, vs) = jax.lax.scan(body, x, blocks)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"k": ks.reshape(cfg.n_layers, *ks.shape[-4:]),
+                    "v": vs.reshape(cfg.n_layers, *vs.shape[-4:])}
+
+
+def decode_step(params: dict, token: Array, cache: dict, pos: Array,
+                cfg: ArchConfig):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    blocks = params["blocks"]
+    m = cfg.moe
+    ck, cv = _split_cache(cache, cfg)
+
+    if m.moe_every == 1:
+        def body(x, inp):
+            blk, k, v = inp
+            h = L.rmsnorm(x, blk["ln1"], cfg.rms_eps)
+            out, k, v = L.attention_decode(blk["attn"], h, cfg, k, v, pos)
+            x = x + out
+            h = L.rmsnorm(x, blk["ln2"], cfg.rms_eps)
+            mo, _ = moe_apply(blk["moe"], h, cfg)
+            return x + mo, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, ck, cv))
+    else:
+        def body(x, inp):
+            blk, k, v = inp
+            h = L.rmsnorm(x, blk["ln"][0], cfg.rms_eps)
+            out, k1, v1 = L.attention_decode(blk["attn_d"], h, cfg, k[0], v[0], pos)
+            x = x + out
+            h = L.rmsnorm(x, blk["ln"][1], cfg.rms_eps)
+            x = x + L.mlp(blk["mlp"], h, cfg.activation)
+            h = L.rmsnorm(x, blk["ln"][2], cfg.rms_eps)
+            out, k2, v2 = L.attention_decode(blk["attn_m"], h, cfg, k[1], v[1], pos)
+            x = x + out
+            h = L.rmsnorm(x, blk["ln"][3], cfg.rms_eps)
+            mo, _ = moe_apply(blk["moe"], h, cfg)
+            return x + mo, (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, ck, cv))
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"k": ks.reshape(cfg.n_layers, *ks.shape[-4:]),
+                    "v": vs.reshape(cfg.n_layers, *vs.shape[-4:])}

@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> -> (config, model module)."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+from .config import ArchConfig
+
+ARCHS = [
+    "nemotron-4-340b",
+    "qwen1.5-32b",
+    "qwen3-moe-235b-a22b",
+    "llava-next-mistral-7b",
+    "llama4-maverick-400b-a17b",
+    "gemma3-27b",
+    "zamba2-2.7b",
+    "mamba2-2.7b",
+    "whisper-tiny",
+    "qwen1.5-4b",
+]
+
+_FAMILY_MODULE = {
+    "dense": "repro.models.dense",
+    "moe": "repro.models.moe_model",
+    "ssm": "repro.models.ssm",
+    "hybrid": "repro.models.zamba",
+    "audio": "repro.models.encdec",
+    "vlm": "repro.models.vlm",
+}
+
+
+def _config_module(arch: str):
+    mod = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str, smoke: bool = False, **kw) -> ArchConfig:
+    m = _config_module(arch)
+    return m.smoke_config(**kw) if smoke else m.config(**kw)
+
+
+def get_model(cfg: ArchConfig) -> Any:
+    """Returns the model module: init, loss_fn, init_cache, prefill, decode_step."""
+    return importlib.import_module(_FAMILY_MODULE[cfg.family])
+
+
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int, kind: str = "train"):
+    """ShapeDtypeStructs for this arch's inputs (see launch.dryrun)."""
+    import jax
+    import jax.numpy as jnp
+
+    sds = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        b = {"tokens": sds((batch, seq), jnp.int32)}
+        if kind == "train":
+            b["labels"] = sds((batch, seq), jnp.int32)
+        if cfg.family == "vlm":
+            b["patches"] = sds((batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            b["frames"] = sds((batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+        return b
+    raise ValueError(kind)

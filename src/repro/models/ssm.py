@@ -1,0 +1,297 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD training/prefill path and O(1)-state decode path.  The chunked
+algorithm computes, per chunk of length Q:
+  intra-chunk: quadratic (masked-decay) attention-like term,
+  chunk state:  sum_k exp(l_end - l_k) dt_k B_k (x) x_k,
+  inter-chunk: a lax.scan carrying the (B, H, P, N) SSM state.
+Decode carries (conv buffer, SSM state) per layer — constant memory in
+sequence length, which is what qualifies this family for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------- layer params ---
+def init_mamba(key: Array, cfg: ArchConfig) -> dict:
+    """Projections are kept SEPARATE (z/x/B/C/dt + three depthwise convs)
+    rather than fused as in the reference CUDA kernels: fused projections put
+    semantic split points mid-shard under tensor parallelism, forcing GSPMD
+    reshards.  Separate weights shard cleanly (di by 'model', d by 'fsdp')."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.state_dim
+    conv_ch = di + 2 * gn
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * scale).astype(cfg.param_dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * scale).astype(cfg.param_dtype),
+        "w_b": (jax.random.normal(ks[2], (d, gn)) * scale).astype(cfg.param_dtype),
+        "w_c": (jax.random.normal(ks[3], (d, gn)) * scale).astype(cfg.param_dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, nh)) * scale).astype(cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[5], (s.conv_width, conv_ch)) * 0.1
+                   ).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((nh,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.param_dtype),
+        "norm": jnp.zeros((di,), cfg.param_dtype),
+        "out_proj": (jax.random.normal(ks[6], (di, d)) / jnp.sqrt(di)
+                     ).astype(cfg.param_dtype),
+    }
+
+
+def _split_proj(p, u, cfg):
+    """Returns (z, xbc_preconv_concat, dt_raw).  xbc stays concatenated only
+    for the depthwise conv + decode conv-buffer layout (channel-wise op)."""
+    z = u @ p["w_z"].astype(u.dtype)
+    x = u @ p["w_x"].astype(u.dtype)
+    b = u @ p["w_b"].astype(u.dtype)
+    c = u @ p["w_c"].astype(u.dtype)
+    dt = u @ p["w_dt"].astype(u.dtype)
+    return z, jnp.concatenate([x, b, c], axis=-1), dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i: i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_scan(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+             chunk: int, init_state: Array | None = None):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); b,c: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  All math in f32.
+
+    TPU note: the intra-chunk quadratic term below materializes a
+    (B,NC,Q,Q,H) decay tensor through HBM; repro.kernels.ssd implements the
+    same computation as a Pallas kernel that keeps the decay matrix in VMEM
+    (validated vs both oracles in tests/test_ssd_kernel.py) — the drop-in
+    replacement for y_intra on real hardware.
+    """
+    bsz, s, h, pdim = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    f32 = jnp.float32
+    x_ = x.reshape(bsz, nc, q, h, pdim).astype(f32)
+    dt_ = dt.reshape(bsz, nc, q, h).astype(f32)
+    b_ = b.reshape(bsz, nc, q, g, n).astype(f32)
+    c_ = c.reshape(bsz, nc, q, g, n).astype(f32)
+    a = -jnp.exp(a_log.astype(f32))                       # (H,) negative
+    da = dt_ * a[None, None, None, :]                     # (B,NC,Q,H) log-decay
+    la = jnp.cumsum(da, axis=2)                           # cumulative within chunk
+
+    # intra-chunk (masked decay "attention"):
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]     # (B,NC,Q,K,H) l_t - l_k
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask the EXPONENT (not the exp) so the masked upper triangle never
+    # overflows — exp(+big) would poison the where-gradient with 0 * inf.
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcqgn,bckgn->bcqkg", c_, b_)         # (B,NC,Q,K,G)
+    xh = x_.reshape(bsz, nc, q, g, hg, pdim)
+    dth = dt_.reshape(bsz, nc, q, g, hg)
+    dech = decay.reshape(bsz, nc, q, q, g, hg)
+    y_intra = jnp.einsum("bcqkg,bcqkgh,bckgh,bckghp->bcqghp",
+                         cb, dech, dth, xh)
+
+    # chunk states: S_c = sum_k exp(l_end - l_k) dt_k B_k (x) x_k
+    end_decay = jnp.exp(la[:, :, -1:, :] - la)            # (B,NC,Q,H)
+    edh = end_decay.reshape(bsz, nc, q, g, hg)
+    s_c = jnp.einsum("bckgn,bckgh,bckgh,bckghp->bcghpn", b_, edh, dth, xh)
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(la[:, :, -1, :])                # (B,NC,H)
+    cdh = chunk_decay.reshape(bsz, nc, g, hg)
+    h0 = (jnp.zeros((bsz, g, hg, pdim, n), f32) if init_state is None
+          else init_state.reshape(bsz, g, hg, pdim, n).astype(f32))
+
+    def body(state, inp):
+        s_chunk, cd = inp  # (B,G,HG,P,N), (B,G,HG)
+        new = state * cd[..., None, None] + s_chunk
+        return new, state  # emit state BEFORE this chunk
+
+    last, prev_states = jax.lax.scan(
+        body, h0, (s_c.transpose(1, 0, 2, 3, 4, 5), cdh.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (B,NC,G,HG,P,N)
+
+    in_decay = jnp.exp(la).reshape(bsz, nc, q, g, hg)
+    y_inter = jnp.einsum("bcqgn,bcqgh,bcghpn->bcqghp", c_, in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, pdim)[:, :s]
+    return y.astype(x.dtype), last.reshape(bsz, h, pdim, n)
+
+
+def mamba_block(p: dict, u: Array, cfg: ArchConfig,
+                init_state: Array | None = None, return_state: bool = False):
+    """Full mamba2 block. u: (B, S, d) -> (B, S, d)."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype))
+    xin = xbc[..., :di]
+    b = xbc[..., di: di + gn].reshape(*u.shape[:2], s.n_groups, s.state_dim)
+    c = xbc[..., di + gn:].reshape(*u.shape[:2], s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(*u.shape[:2], nh, s.head_dim)
+    y, state = ssd_scan(xh, dt, p["a_log"], b, c, s.chunk, init_state)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*u.shape[:2], di)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+# ------------------------------------------------------------- decode -------
+def mamba_decode(p: dict, u: Array, cfg: ArchConfig, conv_buf: Array,
+                 state: Array):
+    """One-token step. u: (B, 1, d); conv_buf: (B, W-1, C); state: (B,H,P,N)."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    z, xbc, dt = _split_proj(p, u, cfg)
+    # conv via buffer
+    window = jnp.concatenate([conv_buf, xbc], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window,
+                          p["conv_w"].astype(u.dtype)) + p["conv_b"].astype(u.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_buf = window[:, 1:]
+    xin = conv_out[..., :di]
+    b = conv_out[..., di: di + gn].reshape(-1, s.n_groups, s.state_dim)
+    c = conv_out[..., di + gn:].reshape(-1, s.n_groups, s.state_dim)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None])                              # (B, H)
+    xh = xin[:, 0].reshape(-1, nh, s.head_dim).astype(jnp.float32)
+    g, hg = s.n_groups, nh // s.n_groups
+    xg = xh.reshape(-1, g, hg, s.head_dim)
+    dtg = dt1.reshape(-1, g, hg)
+    stg = state.reshape(-1, g, hg, s.head_dim, s.state_dim).astype(jnp.float32)
+    upd = jnp.einsum("bgn,bgh,bghp->bghpn", b.astype(jnp.float32), dtg, xg)
+    stg = stg * decay.reshape(-1, g, hg)[..., None, None] + upd
+    y = jnp.einsum("bgn,bghpn->bghp", c.astype(jnp.float32), stg)
+    y = y.reshape(-1, nh, s.head_dim) + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, di).astype(u.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out, new_buf, stg.reshape(-1, nh, s.head_dim, s.state_dim)
+
+
+# --------------------------------------------------------------- model ------
+def _stack(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init(key: Array, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": L.init_embed(k1, cfg),
+        "blocks": {
+            "mamba": _stack(k2, cfg.n_layers, lambda k: init_mamba(k, cfg)),
+            "ln": jnp.zeros((cfg.n_layers, cfg.d_model), cfg.param_dtype),
+        },
+    }
+
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(x, blk):
+        def f(x):
+            h = L.rmsnorm(x, blk["ln"], cfg.rms_eps)
+            return x + mamba_block(blk["mamba"], h, cfg)
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(x), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    x = forward(params, batch["tokens"], cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return L.softmax_xent(logits, batch["labels"], mode=cfg.xent_mode)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int = 0, dtype=None) -> dict:
+    """SSM 'cache' = conv buffer + state per layer; independent of max_seq."""
+    dtype = dtype or cfg.compute_dtype
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.state_dim
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((cfg.n_layers, batch, nh, s.head_dim, s.state_dim),
+                           jnp.float32),
+    }
+
+
+def prefill(params: dict, tokens: Array, cfg: ArchConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+
+    def body(x, blk):
+        h = L.rmsnorm(x, blk["ln"], cfg.rms_eps)
+        # recompute the conv tail for the decode buffer
+        z, xbc, dt = _split_proj(blk["mamba"], h, cfg)
+        out, state = mamba_block(blk["mamba"], h, cfg, return_state=True)
+        conv_tail = xbc[:, -(s.conv_width - 1):, :]
+        return x + out, (conv_tail, state)
+
+    x, (convs, states) = jax.lax.scan(body, x, params["blocks"])
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"conv": convs, "state": states}
+
+
+def decode_step(params: dict, token: Array, cache: dict, pos: Array,
+                cfg: ArchConfig):
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, inp):
+        blk, conv_buf, state = inp
+        h = L.rmsnorm(x, blk["ln"], cfg.rms_eps)
+        out, new_buf, new_state = mamba_decode(blk["mamba"], h, cfg, conv_buf,
+                                               state)
+        return x + out, (new_buf, new_state)
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["state"]))
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"conv": convs, "state": states}

@@ -1,0 +1,38 @@
+"""LLaVA-NeXT-style VLM backbone (Mistral-7B LM + anyres patch embeddings).
+
+The vision tower + projector is STUBBED per the brief: the data pipeline /
+input_specs supply pre-projected patch embeddings (B, n_patches, d_model).
+Early fusion: patch embeddings are prepended to the token embeddings and the
+dense decoder runs over the fused sequence; the LM loss covers text positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import dense
+from .config import ArchConfig
+
+Array = jax.Array
+
+init = dense.init
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    return dense.loss_fn(params, batch, cfg)  # dense handles batch["patches"]
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    # cache must also cover the patch positions
+    return dense.init_cache(cfg, batch, max_seq + cfg.n_patches, dtype)
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig):
+    return dense.prefill(params, batch["tokens"], cfg,
+                         extra_embeds=batch["patches"])
+
+
+def decode_step(params: dict, token: Array, cache: dict, pos: Array,
+                cfg: ArchConfig):
+    """pos counts the fused sequence (patches + text)."""
+    return dense.decode_step(params, token, cache, pos, cfg)

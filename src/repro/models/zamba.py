@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every `attn_every` layers (arXiv:2411.15242).
+
+The shared block's weights are reused at every invocation (parameter-efficient)
+but each invocation keeps its own KV cache.  A sliding window bounds the
+attention state so the hybrid still qualifies for long_500k decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from .ssm import init_mamba, mamba_block, mamba_decode
+
+Array = jax.Array
+
+
+def _n_periods(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(key: Array, cfg: ArchConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_p = _n_periods(cfg)
+    per = cfg.attn_every
+
+    def period_init(k):
+        ks = jax.random.split(k, per)
+        return jax.vmap(lambda kk: init_mamba(kk, cfg))(ks)
+
+    return {
+        "embed": L.init_embed(k1, cfg),
+        "blocks": {
+            "mamba": jax.vmap(period_init)(jax.random.split(k2, n_p)),
+            "ln": jnp.zeros((n_p, per, cfg.d_model), cfg.param_dtype),
+        },
+        "shared": {
+            "attn": L.init_attn(k3, cfg),
+            "mlp": L.init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.activation,
+                              cfg.param_dtype),
+            "ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        },
+    }
+
+
+def _shared_attn(params, x, cfg, positions):
+    sh = params["shared"]
+    h = L.rmsnorm(x, sh["ln1"], cfg.rms_eps)
+    x = x + L.attention(sh["attn"], h, cfg, positions, window=cfg.sliding_window)
+    h = L.rmsnorm(x, sh["ln2"], cfg.rms_eps)
+    return x + L.mlp(sh["mlp"], h, cfg.activation)
+
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def period(x, blk):
+        def f(x):
+            x = _shared_attn(params, x, cfg, positions)
+
+            def inner(x, lyr):
+                h = L.rmsnorm(x, lyr["ln"], cfg.rms_eps)
+                return x + mamba_block(lyr["mamba"], h, cfg), None
+
+            x, _ = jax.lax.scan(inner, x, blk)
+            return x
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(x), None
+
+    x, _ = jax.lax.scan(period, x, params["blocks"])
+    return x
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> Array:
+    x = forward(params, batch["tokens"], cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return L.softmax_xent(logits, batch["labels"], mode=cfg.xent_mode)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    s = cfg.ssm
+    n_p = _n_periods(cfg)
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.state_dim
+    kv_seq = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    return {
+        "k": jnp.zeros((n_p, batch, kv_seq, cfg.n_kv_heads, cfg.dh), dtype),
+        "v": jnp.zeros((n_p, batch, kv_seq, cfg.n_kv_heads, cfg.dh), dtype),
+        "conv": jnp.zeros((n_p, cfg.attn_every, batch, s.conv_width - 1, conv_ch),
+                          dtype),
+        "state": jnp.zeros((n_p, cfg.attn_every, batch, nh, s.head_dim,
+                            s.state_dim), jnp.float32),
+    }
+
+
+def prefill(params: dict, tokens: Array, cfg: ArchConfig, max_seq: int = 0):
+    """Prefill; the KV ring buffer is sized for the DECODE horizon:
+    win = min(max_seq or prefill_len, sliding_window)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    horizon = max(max_seq, s)
+    win = min(horizon, cfg.sliding_window) if cfg.sliding_window else horizon
+    sh = params["shared"]
+    ssm_cfg = cfg.ssm
+
+    def period(x, blk):
+        h = L.rmsnorm(x, sh["ln1"], cfg.rms_eps)
+        q, k, v = L._qkv(sh["attn"], h, cfg, positions)
+        out = L._sdpa_blocked(q, k, v, positions, positions,
+                              cfg.sliding_window, cfg.attn_q_block)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, sh["attn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(x, sh["ln2"], cfg.rms_eps)
+        x = x + L.mlp(sh["mlp"], h, cfg.activation)
+
+        def inner(x, lyr):
+            h = L.rmsnorm(x, lyr["ln"], cfg.rms_eps)
+            from .ssm import _split_proj
+            _, xbc, _ = _split_proj(lyr["mamba"], h, cfg)
+            out, state = mamba_block(lyr["mamba"], h, cfg, return_state=True)
+            return x + out, (xbc[:, -(ssm_cfg.conv_width - 1):, :], state)
+
+        x, (convs, states) = jax.lax.scan(inner, x, blk)
+        # ring-buffer layout: slot (p % win) must hold position p so decode's
+        # overwrite at slot pos%win replaces the oldest entry.
+        if s <= win:
+            k_tail = jnp.pad(k, ((0, 0), (0, win - s), (0, 0), (0, 0)))
+            v_tail = jnp.pad(v, ((0, 0), (0, win - s), (0, 0), (0, 0)))
+        else:
+            k_tail = jnp.roll(k[:, -win:], shift=s % win, axis=1)
+            v_tail = jnp.roll(v[:, -win:], shift=s % win, axis=1)
+        return x, (k_tail, v_tail, convs, states)
+
+    x, (ks, vs, convs, states) = jax.lax.scan(period, x, params["blocks"])
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"k": ks, "v": vs, "conv": convs, "state": states}
+
+
+def decode_step(params: dict, token: Array, cache: dict, pos: Array,
+                cfg: ArchConfig):
+    """Decode. KV cache is a ring buffer of size window when sliding."""
+    x = L.embed(params["embed"], token[:, None], cfg)
+    win = cache["k"].shape[2]
+    sh = params["shared"]
+    # ring-buffer slot + effective positions of cached keys handled by storing
+    # absolute positions alongside is overkill here: with window w the cache
+    # holds positions pos-w+1..pos; we rotate so slot = pos % w.
+    slot = pos % win
+
+    def period(x, inp):
+        blk, ck, cv, conv, state = inp
+        h = L.rmsnorm(x, sh["ln1"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, sh["attn"]["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, sh["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, sh["attn"]["wv"].astype(h.dtype))
+        q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+        onehot = (jnp.arange(win)[None] == slot[:, None]).astype(ck.dtype)
+        ck = ck * (1 - onehot[..., None, None]) + onehot[..., None, None] * k
+        cv = cv * (1 - onehot[..., None, None]) + onehot[..., None, None] * v
+        kvh = ck.shape[2]
+        groups = cfg.n_heads // kvh
+        qg = q.reshape(-1, 1, kvh, groups, cfg.dh)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                            ck.astype(jnp.float32)) / jnp.sqrt(cfg.dh)
+        # valid = slots already written (pos+1 entries, capped by win)
+        valid = jnp.arange(win)[None] < jnp.minimum(pos[:, None] + 1, win)
+        logits = jnp.where(valid[:, None, None, None, :], logits, L.NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(cv.dtype), cv)
+        out = out.reshape(-1, 1, cfg.n_heads, cfg.dh)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, sh["attn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(x, sh["ln2"], cfg.rms_eps)
+        x = x + L.mlp(sh["mlp"], h, cfg.activation)
+
+        def inner(x, lyr_inp):
+            lyr, cbuf, st = lyr_inp
+            h = L.rmsnorm(x, lyr["ln"], cfg.rms_eps)
+            out, nbuf, nst = mamba_decode(lyr["mamba"], h, cfg, cbuf, st)
+            return x + out, (nbuf, nst)
+
+        x, (nconvs, nstates) = jax.lax.scan(inner, x, (blk, conv, state))
+        return x, (ck, cv, nconvs, nstates)
+
+    x, (ks, vs, convs, states) = jax.lax.scan(
+        period, x, (params["blocks"], cache["k"], cache["v"], cache["conv"],
+                    cache["state"]))
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"k": ks, "v": vs, "conv": convs, "state": states}

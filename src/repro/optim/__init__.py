@@ -1,0 +1,4 @@
+from .adam import Adam, AdamState, SGDOpt
+from .schedules import constant, cosine, linear_warmup_cosine
+
+__all__ = ["Adam", "AdamState", "SGDOpt", "constant", "cosine", "linear_warmup_cosine"]

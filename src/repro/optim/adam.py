@@ -1,0 +1,79 @@
+"""Minimal Adam / SGD optimizers (no external deps), pytree-native."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params: Any) -> AdamState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads: Any, state: AdamState, params: Any, lr_scale=1.0):
+        count = state.count + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1**c
+        bc2 = 1.0 - self.b2**c
+        mu = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * lr_scale * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(mu=mu, nu=nu, count=count)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDOpt:
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params: Any) -> Any:
+        if not self.momentum:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(self, grads: Any, state: Any, params: Any, lr_scale=1.0):
+        if not self.momentum:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - self.lr * lr_scale * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        vel = jax.tree.map(
+            lambda v, g: self.momentum * v + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32)
+                          - self.lr * lr_scale * v).astype(p.dtype), params, vel)
+        return new, vel

@@ -1,0 +1,26 @@
+"""Learning-rate schedules as plain callables step -> scale."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float = 1.0):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+
+    return fn
+
+
+def linear_warmup_cosine(warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

@@ -1,0 +1,62 @@
+"""Sharding-aware npz checkpointing (no external deps).
+
+Saves a pytree of (possibly sharded) arrays to <dir>/step_<n>.npz plus a
+sidecar JSON with the treedef and metadata.  Restore rebuilds the pytree and
+(optionally) re-places leaves with provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, metadata: dict | None = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arrays[f"a{i}"] = np.asarray(jax.device_get(leaf))
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(path, **arrays)
+    meta = {"names": names, "step": step, **(metadata or {})}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """`like` provides the pytree structure (and dtypes for casting)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        arrays = [data[f"a{i}"] for i in range(len(data.files))]
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat) != len(arrays):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, "
+                         f"expected {len(flat)}")
+    leaves = [np.asarray(a, dtype=l.dtype) for a, l in zip(arrays, flat)]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

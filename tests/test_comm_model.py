@@ -1,0 +1,47 @@
+"""Wireless comm/energy model tests (paper Sec. V-A accounting)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm_model as cm
+from repro.core.topology import random_placement
+
+
+def test_energy_monotone_in_bits_and_distance():
+    e1 = cm.tx_energy(1000, 50, 40e3, 1e-3, 1e-6)
+    e2 = cm.tx_energy(2000, 50, 40e3, 1e-3, 1e-6)
+    e3 = cm.tx_energy(1000, 100, 40e3, 1e-3, 1e-6)
+    assert e2 > e1 and e3 > e1
+    assert e3 == pytest.approx(4 * e1)  # free-space D^2
+
+
+def test_bandwidth_split_decentralized_vs_ps():
+    radio = cm.RadioConfig(total_bandwidth_hz=2e6, n_workers=50)
+    assert radio.worker_bandwidth(True) == pytest.approx(2 * 2e6 / 50)
+    assert radio.worker_bandwidth(False) == pytest.approx(2e6 / 50)
+
+
+def test_decentralized_cheaper_than_ps_for_same_bits():
+    """Neighbors are closer than the PS on average -> chain round cheaper."""
+    p = random_placement(50, seed=0)
+    radio = cm.RadioConfig(n_workers=50)
+    bits = 192.0
+    e_chain = cm.round_energy_decentralized(np.full(50, bits),
+                                            p.broadcast_dist(), radio)
+    e_ps = cm.round_energy_ps(bits, p.ps_dist, bits, radio)
+    assert e_chain < e_ps
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=4, max_value=64),
+       st.integers(min_value=0, max_value=10**6))
+def test_placement_invariants(n, seed):
+    p = random_placement(n, seed=seed)
+    assert sorted(p.chain.tolist()) == list(range(n))
+    assert (p.chain_hop_dist >= 0).all()
+    assert 0 <= p.ps_index < n
+    assert p.ps_dist[p.ps_index] == 0
+    bd = p.broadcast_dist()
+    # every broadcast distance equals one of the worker's hop distances
+    assert bd[0] == pytest.approx(p.chain_hop_dist[0])
+    assert bd[-1] == pytest.approx(p.chain_hop_dist[-1])

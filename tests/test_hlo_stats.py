@@ -1,0 +1,62 @@
+"""Calibration tests for the HLO accounting used by the roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_stats
+
+
+def test_hlo_cost_exact_on_scan_of_matmuls():
+    def g(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jnp.zeros((128, 256))
+    w = jnp.zeros((7, 256, 256))
+    txt = jax.jit(g).lower(x, w).compile().as_text()
+    cost = hlo_stats.hlo_cost(txt)
+    expected = 7 * 2 * 128 * 256 * 256
+    assert abs(cost["flops"] - expected) / expected < 1e-6
+
+
+def test_hlo_cost_counts_plain_dot():
+    f = lambda a, b: a @ b
+    a = jnp.zeros((64, 128))
+    b = jnp.zeros((128, 32))
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    cost = hlo_stats.hlo_cost(txt)
+    assert cost["flops"] == 2 * 64 * 128 * 32
+
+
+def test_shape_bytes():
+    assert hlo_stats._shape_bytes("f32[2,3]{1,0}") == 24
+    assert hlo_stats._shape_bytes("bf16[10]") == 20
+    assert hlo_stats._shape_bytes("u8[100]{0}") == 100
+    assert hlo_stats._shape_bytes("(f32[2], u8[4])") == 12
+
+
+def test_collective_stats_on_psum():
+    import subprocess  # noqa: F401  (documentational)
+
+    # single-device module: no collectives
+    txt = jax.jit(lambda x: x + 1).lower(jnp.zeros((4,))).compile().as_text()
+    stats = hlo_stats.collective_stats(txt)
+    assert stats.total_bytes == 0
+
+
+def test_trip_count_multiplier_parsing():
+    # scan of 5 adds: the while body should get multiplier 5 when the
+    # backend_config advertises known_trip_count
+    def f(x):
+        def body(c, _):
+            return c * 1.5 + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    txt = jax.jit(f).lower(jnp.zeros((8, 128))).compile().as_text()
+    if "known_trip_count" in txt:
+        blocks = hlo_stats._computation_blocks(txt)
+        mults = hlo_stats._reach_multipliers(blocks, txt)
+        assert max(mults.values()) >= 5

@@ -1,0 +1,106 @@
+"""Per-kernel allclose sweeps vs the pure-jnp ref.py oracles (interpret mode)."""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pack import ops as pack_ops
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.quantize import quantize as q_kernel
+from repro.kernels.quantize import ref as q_ref
+
+SHAPES = [(7,), (128,), (1000,), (31, 33), (4, 256, 17), (2048, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+BITS = [1, 2, 4, 8]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [2, 8])
+def test_quantize_matches_ref(shape, dtype, bits):
+    key = jax.random.PRNGKey(zlib.crc32(repr((shape, str(dtype), bits)).encode()) % 2**31)
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = jax.random.normal(k1, shape).astype(dtype)
+    hat = (0.5 * jax.random.normal(k2, shape)).astype(dtype)
+    r = jnp.max(jnp.abs(theta.astype(jnp.float32) - hat.astype(jnp.float32)))
+    q_p, hat_p = q_ops.quantize_dequantize(theta, hat, k3, r, bits, impl="pallas")
+    q_r, hat_r = q_ops.quantize_dequantize(theta, hat, k3, r, bits, impl="ref")
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_r))
+    # hat can differ by ~1 f32 ULP (FMA association inside the fused kernel),
+    # which may land on a bf16 rounding boundary -> allow 1 bf16 ULP.
+    atol = 2e-5 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        np.asarray(hat_p, np.float32), np.asarray(hat_r, np.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_error_bound(bits):
+    """|theta_hat - theta| <= Delta = 2R/(2^b - 1) elementwise."""
+    key = jax.random.PRNGKey(bits)
+    theta = jax.random.normal(key, (4096,))
+    hat0 = jnp.zeros_like(theta)
+    r = jnp.max(jnp.abs(theta))
+    _, hat = q_ops.quantize_dequantize(theta, hat0, jax.random.PRNGKey(1), r, bits)
+    delta = 2 * r / (2**bits - 1)
+    assert float(jnp.max(jnp.abs(hat - theta))) <= float(delta) + 1e-5
+
+
+def test_quantize_zero_radius_is_identity():
+    theta = jnp.ones((257,))
+    hat = jnp.ones((257,))
+    r = jnp.zeros(())
+    q, new_hat = q_ops.quantize_dequantize(theta, hat, jax.random.PRNGKey(0), r, 2)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_allclose(np.asarray(new_hat), np.asarray(hat))
+
+
+def test_quantize_levels_in_range():
+    theta = jax.random.normal(jax.random.PRNGKey(0), (999,))
+    hat = jnp.zeros_like(theta)
+    r = jnp.max(jnp.abs(theta))
+    for bits in BITS:
+        q, _ = q_ops.quantize_dequantize(theta, hat, jax.random.PRNGKey(1), r, bits)
+        assert int(jnp.max(q)) <= 2**bits - 1
+
+
+def test_quantize_sender_receiver_consistency():
+    """Receiver reconstruction from (q, R, b) equals sender's new hat exactly."""
+    from repro.core import quantizer as Q
+
+    theta = jax.random.normal(jax.random.PRNGKey(5), (1234,))
+    hat0 = 0.3 * jax.random.normal(jax.random.PRNGKey(6), (1234,))
+    r = jnp.max(jnp.abs(theta - hat0))
+    bits = jnp.asarray(4, jnp.int32)
+    q, hat_sender = Q.quantize_tensor(
+        theta, hat0, jax.random.PRNGKey(7), radius=r, bits=bits
+    )
+    hat_receiver = Q.dequantize_tensor(q, hat0, radius=r, bits=bits)
+    np.testing.assert_allclose(np.asarray(hat_sender), np.asarray(hat_receiver), atol=0)
+
+
+@pytest.mark.parametrize("n", [1, 2, 255, 256, 257, 999, 65536, 70000])
+def test_pack_roundtrip_and_ref(n):
+    q = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, 16).astype(jnp.uint8)
+    pk = pack_ops.pack4(q)
+    pk_ref = pack_ops.pack4(q, impl="ref")
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pk_ref))
+    un = pack_ops.unpack4(pk, n)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(q))
+    un_ref = pack_ops.unpack4(pk_ref, n, impl="ref")
+    np.testing.assert_array_equal(np.asarray(un_ref), np.asarray(q))
+    assert pk.size <= n // 2 + 256  # ~2x compression (+ row padding)
+
+
+def test_kernel_block_shape_alignment():
+    """Kernel tiles are (m,128) lane-aligned for every input size."""
+    for n in (1, 127, 128, 129, 12345):
+        theta = jnp.arange(n, dtype=jnp.float32)
+        hat = jnp.zeros_like(theta)
+        r = jnp.max(jnp.abs(theta))
+        q, hat_new = q_kernel.quantize_dequantize(
+            theta, hat, jnp.ones_like(theta), r, jnp.asarray(3.0), interpret=True
+        )
+        assert q.shape == theta.shape and hat_new.shape == theta.shape

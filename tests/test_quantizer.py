@@ -1,0 +1,101 @@
+"""Property-based tests of the stochastic quantizer invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer as Q
+
+jax.config.update("jax_enable_x64", False)
+
+
+@st.composite
+def tensor_and_bits(draw):
+    n = draw(st.integers(min_value=1, max_value=512))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    bits = draw(st.sampled_from([1, 2, 3, 4, 8]))
+    scale = draw(st.floats(min_value=1e-3, max_value=1e3))
+    return n, seed, bits, scale
+
+
+@settings(max_examples=40, deadline=None)
+@given(tensor_and_bits())
+def test_error_bounded_by_step(args):
+    n, seed, bits, scale = args
+    key = jax.random.PRNGKey(seed)
+    theta = scale * jax.random.normal(key, (n,))
+    hat0 = jnp.zeros_like(theta)
+    r = jnp.max(jnp.abs(theta))
+    q, hat = Q.quantize_tensor(
+        theta, hat0, jax.random.PRNGKey(seed + 1), radius=r,
+        bits=jnp.asarray(bits, jnp.int32),
+    )
+    step = 2 * float(r) / (2**bits - 1)
+    err = float(jnp.max(jnp.abs(hat - theta)))
+    assert err <= step + 1e-4 * step + 1e-30
+    assert int(q.max()) <= 2**bits - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_unbiasedness(seed):
+    """E[theta_hat] == theta: average many independent stochastic roundings."""
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.normal(key, (16,))
+    hat0 = jnp.zeros_like(theta)
+    r = jnp.max(jnp.abs(theta))
+    reps = 4000
+
+    def one(k):
+        _, hat = Q.quantize_tensor(
+            theta, hat0, k, radius=r, bits=jnp.asarray(2, jnp.int32)
+        )
+        return hat
+
+    hats = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(seed + 1), reps))
+    mean = jnp.mean(hats, axis=0)
+    step = 2 * r / 3
+    # std of mean ~ step/2/sqrt(reps); allow 5 sigma
+    tol = 5 * float(step) / 2 / np.sqrt(reps)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(theta), atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_pytree_quantize_roundtrip_sync(seed):
+    """Sender state and receiver reconstruction stay identical across steps."""
+    cfg = Q.QuantizerConfig(bits=3)
+    key = jax.random.PRNGKey(seed)
+    theta = {
+        "w": jax.random.normal(key, (8, 5)),
+        "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (5,)),
+    }
+    sender = Q.init_state(theta, cfg)
+    receiver_hat = jax.tree.map(jnp.zeros_like, theta)
+    for step in range(4):
+        k = jax.random.PRNGKey(seed + 10 + step)
+        payload, sender = Q.quantize(theta, sender, k, cfg)
+        receiver_hat = Q.dequantize(payload, receiver_hat)
+        for a, b in zip(jax.tree.leaves(sender.theta_hat), jax.tree.leaves(receiver_hat)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # drift theta a little, as training would
+        theta = jax.tree.map(lambda x: 0.9 * x, theta)
+
+
+def test_bit_growth_rule():
+    """Eq. 11: bits grow exactly enough to keep Delta non-increasing."""
+    cfg = Q.QuantizerConfig(bits=2, adapt_bits=True, max_bits=8)
+    b_prev = jnp.asarray(2, jnp.int32)
+    # R doubles => need Delta_new <= Delta_old => 2R/(2^b-1) <= 2R_old/(2^b_prev-1)
+    b = Q._next_bits(cfg, b_prev, jnp.asarray(2.0), jnp.asarray(1.0))
+    lev_prev, lev_new = 2**2 - 1, 2 ** int(b) - 1
+    assert 2 * 2.0 / lev_new <= 2 * 1.0 / lev_prev + 1e-6
+    # R shrinks => bits may stay at 1..2, Delta still non-increasing
+    b2 = Q._next_bits(cfg, b_prev, jnp.asarray(0.25), jnp.asarray(1.0))
+    assert 2 * 0.25 / (2 ** int(b2) - 1) <= 2 * 1.0 / lev_prev + 1e-6
+
+
+def test_payload_bits():
+    cfg = Q.QuantizerConfig(bits=2)
+    assert Q.payload_bits(cfg, 1000) == 2064
+    assert Q.payload_bits(8, 10) == 144

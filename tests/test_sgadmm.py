@@ -1,0 +1,70 @@
+"""Q-SGADMM (DNN, stochastic, non-convex) system tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gadmm import GADMMConfig
+from repro.core.quantizer import QuantizerConfig
+from repro.core.sgadmm import SGADMMConfig, SGADMMTrainer
+from repro.data.synthetic import classification_shards
+from repro.models import mlp
+
+
+def _make_trainer(quantize, bits=8, n=6, seed=0, layers=((32, 24), (24, 10))):
+    p0 = mlp.init_params(jax.random.PRNGKey(seed), layers=list(layers))
+    cfg = SGADMMConfig(
+        gadmm=GADMMConfig(rho=1.0, quantize=quantize,
+                          qcfg=QuantizerConfig(bits=bits), alpha=0.01),
+        local_iters=10, local_lr=3e-3, batch_size=64)
+    return SGADMMTrainer(mlp.loss_fn, p0, n, cfg)
+
+
+@pytest.fixture(scope="module")
+def data():
+    n = 6
+    xs, ys = classification_shards(n_workers=n, samples=1800, dim=32, seed=0)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+def _train(tr, xs, ys, iters, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(iters):
+        sel = rng.integers(0, xs.shape[1], size=(xs.shape[0], 64))
+        xb = jnp.take_along_axis(xs, jnp.asarray(sel)[:, :, None], axis=1)
+        yb = jnp.take_along_axis(ys, jnp.asarray(sel), axis=1)
+        tr.train_step(xb, yb)
+    return tr
+
+
+def test_qsgadmm_reaches_accuracy(data):
+    xs, ys = data
+    tr = _train(_make_trainer(quantize=True, bits=8), xs, ys, 40)
+    x_all, y_all = xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)
+    acc = float(mlp.accuracy(tr.mean_params(), x_all, y_all))
+    assert acc > 0.8, acc
+
+
+def test_qsgadmm_matches_sgadmm(data):
+    """Paper Fig. 4: quantized and unquantized reach similar accuracy."""
+    xs, ys = data
+    x_all, y_all = xs.reshape(-1, xs.shape[-1]), ys.reshape(-1)
+    tr_q = _train(_make_trainer(quantize=True, bits=8), xs, ys, 40)
+    tr_f = _train(_make_trainer(quantize=False), xs, ys, 40)
+    acc_q = float(mlp.accuracy(tr_q.mean_params(), x_all, y_all))
+    acc_f = float(mlp.accuracy(tr_f.mean_params(), x_all, y_all))
+    assert acc_q > acc_f - 0.08, (acc_q, acc_f)
+    assert tr_q.bits_per_round() < tr_f.bits_per_round() / 3.5
+
+
+def test_workers_reach_consensus(data):
+    xs, ys = data
+    tr = _train(_make_trainer(quantize=True, bits=8), xs, ys, 30)
+    theta = tr.state.theta
+    spread = float(jnp.max(jnp.abs(theta - jnp.mean(theta, axis=0, keepdims=True))))
+    scale = float(jnp.max(jnp.abs(theta)))
+    assert spread < 0.35 * scale, (spread, scale)
+
+
+def test_mlp_paper_architecture_size():
+    assert mlp.num_params() == 784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
