@@ -26,7 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .quantizer import QuantizerConfig
+from .quantizer import QuantizerConfig, header_bits
 
 Array = jax.Array
 
@@ -88,7 +88,6 @@ def make_quadratic(xs: Array, ys: Array, rho: float) -> Quadratic:
     n, _, d = xs.shape
     xtx = jnp.einsum("nmd,nme->nde", xs, xs)
     xty = jnp.einsum("nmd,nm->nd", xs, ys)
-    cn = jnp.ones((n,)).at[0].set(1.0).at[-1].set(1.0)
     cn = jnp.where((jnp.arange(n) == 0) | (jnp.arange(n) == n - 1), 1.0, 2.0)
     eye = jnp.eye(d)
     minv = jnp.linalg.inv(xtx + rho * cn[:, None, None] * eye[None])
@@ -131,11 +130,13 @@ def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
     hat_new = hat_prev + step * qlev - r_new[:, None]
     hat_new = jnp.where(r_new[:, None] > 0, hat_new, hat_prev)
     if cfg.topk_frac < 1.0:
-        # sparsify: only the k largest |delta| coords are transmitted; the
-        # rest keep the receiver's (== sender's) previous hat value.
+        # sparsify: exactly the k largest |delta| coords are transmitted (ties
+        # broken by index, matching the billed k of bits_per_round); the rest
+        # keep the receiver's (== sender's) previous hat value.
         k = max(int(d * cfg.topk_frac), 1)
-        thresh = -jnp.sort(-jnp.abs(diff), axis=1)[:, k - 1][:, None]
-        sent = jnp.abs(diff) >= thresh
+        _, top_idx = jax.lax.top_k(jnp.abs(diff), k)  # (N, k)
+        sent = jnp.zeros((n, d), bool).at[
+            jnp.arange(n)[:, None], top_idx].set(True)
         hat_new = jnp.where(sent, hat_new, hat_prev)
     if not cfg.quantize:
         hat_new = theta  # GADMM: full precision "transmission"
@@ -217,11 +218,13 @@ def residuals(state: ChainState) -> tuple[Array, Array]:
 def bits_per_round(cfg: GADMMConfig, n: int, d: int) -> int:
     """Total bits all N workers transmit in one iteration.
 
-    Q-GADMM payload per worker = b*d + b_R (+ b_b if bits adapt); the paper's
-    experiments use fixed bits, i.e. 32 + b*d (Sec. V-A).
+    Q-GADMM payload per worker = b*d + header, with the header shared with
+    quantizer.payload_bits (quantizer.header_bits: R always, b only when
+    adaptive); the paper's experiments use fixed bits, i.e. 32 + b*d
+    (Sec. V-A).
     """
     if cfg.quantize:
-        header = 64 if cfg.qcfg.adapt_bits else 32
+        header = header_bits(cfg.qcfg.adapt_bits)
         if cfg.topk_frac < 1.0:
             import math
 

@@ -13,8 +13,10 @@ theta_n^k and its previously-quantized model theta_hat_n^{k-1}:
 The rounding probability choice makes E[theta_hat] = theta (unbiased, eq. 8)
 with per-coordinate variance <= Delta^2 / 4.
 
-The payload actually transmitted is (q:int levels, R:f32, b:int) -> b*d + 64 bits
-instead of 32*d bits for a full-precision vector.
+The payload actually transmitted is (q:int levels, R:f32[, b:int]) ->
+b*d + 32 (+ 32 when bits adapt) bits instead of 32*d bits for a
+full-precision vector; see header_bits / payload_bits (the same accounting
+rule backs gadmm.bits_per_round and the distributed trainer's metrics).
 
 Everything here is pure JAX and jit/vmap/pjit friendly.  A fused Pallas TPU
 kernel for the same computation lives in repro/kernels/quantize (ops.q_dequantize
@@ -92,12 +94,17 @@ def quantize_tensor(
 ) -> tuple[Array, Array]:
     """Quantize one tensor given a (scalar) radius and bit width.
 
-    Returns (q_levels int8, theta_hat_new).  Levels fit in [0, 2^b - 1] <= 255.
+    Returns (q_levels uint8, theta_hat_new).  Levels fit in [0, 2^b - 1] <= 255.
+    theta_hat_new is returned in theta_hat_prev's dtype — the same rule
+    dequantize_tensor applies on the receiver — so sender and receiver stay
+    bit-identical even for mixed-precision pytrees (theta in bf16, hat state
+    in f32).  The fused Pallas kernel (repro.kernels.quantize) follows the
+    same contract.
     """
     delta_theta = theta.astype(jnp.float32) - theta_hat_prev.astype(jnp.float32)
     levels = (2.0 ** bits.astype(jnp.float32)) - 1.0
     # Guard R == 0 (already converged / first step with theta == theta_hat):
-    # then all coordinates quantize to the mid level and theta_hat is unchanged.
+    # then q is all-zero and theta_hat is unchanged.
     safe_r = jnp.maximum(radius, 1e-30)
     step = 2.0 * safe_r / levels
     c = (delta_theta + radius) / step
@@ -106,9 +113,10 @@ def quantize_tensor(
     u = jax.random.uniform(key, theta.shape, jnp.float32)
     q = low + (u < p).astype(jnp.float32)
     q = jnp.clip(q, 0.0, levels)
+    q = jnp.where(radius > 0, q, jnp.zeros_like(q))
     theta_hat = theta_hat_prev.astype(jnp.float32) + step * q - radius
     theta_hat = jnp.where(radius > 0, theta_hat, theta_hat_prev.astype(jnp.float32))
-    return q.astype(jnp.uint8), theta_hat.astype(theta.dtype)
+    return q.astype(jnp.uint8), theta_hat.astype(theta_hat_prev.dtype)
 
 
 def dequantize_tensor(
@@ -151,7 +159,7 @@ def quantize(
     """Quantize a pytree of tensors with one shared radius (paper-faithful).
 
     Returns (payload, new_state).  payload = {'q': pytree uint8, 'radius': f32,
-    'bits': i32}; its wire size is bits*d + 64 bits.
+    'bits': i32}; its wire size is payload_bits(cfg, d) bits.
     The *sender-side* new_state.theta_hat equals the receiver's reconstruction,
     keeping both sides exactly in sync (key requirement of the algorithm).
     """
@@ -187,7 +195,21 @@ def dequantize(payload: dict[str, Any], theta_hat_prev: Any) -> Any:
     )
 
 
-def payload_bits(cfg_or_bits, num_params: int) -> int:
-    """Wire size in bits of one transmission: b*d + (b_R + b_b) = b*d + 64."""
-    b = cfg_or_bits.bits if isinstance(cfg_or_bits, QuantizerConfig) else int(cfg_or_bits)
-    return b * num_params + 64
+def header_bits(adapt_bits: bool) -> int:
+    """Per-transmission header: R (f32) always, b (i32) only when the
+    bit-growth rule is active (fixed bits need not be retransmitted).
+
+    Single source of truth for payload accounting — payload_bits,
+    gadmm.bits_per_round, and the dist trainer's metrics all use it.
+    """
+    return 32 + 32 * int(bool(adapt_bits))
+
+
+def payload_bits(cfg_or_bits, num_params: int, *, adapt_bits: bool = False) -> int:
+    """Wire size in bits of one transmission: b*d + header."""
+    if isinstance(cfg_or_bits, QuantizerConfig):
+        b = cfg_or_bits.bits
+        adapt_bits = cfg_or_bits.adapt_bits
+    else:
+        b = int(cfg_or_bits)
+    return b * num_params + header_bits(adapt_bits)

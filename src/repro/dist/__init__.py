@@ -1,0 +1,11 @@
+"""Distributed runtime: sharded Q-GADMM training + serving.
+
+`qgadmm` implements paper Algorithm 1 (eqs. 14-18) across the 'worker' axis of
+a factored ('worker', 'fsdp', 'model') mesh: each worker's replica is
+FSDP+TP sharded inside its device group, and the chain exchange travels as
+uint8 collective-permutes.  `serve` is the inference-side counterpart
+(batched prefill + decode on a ('data', 'model') mesh).
+"""
+from . import qgadmm, serve, sharding
+
+__all__ = ["qgadmm", "serve", "sharding"]

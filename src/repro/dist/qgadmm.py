@@ -1,0 +1,537 @@
+"""Sharded multi-worker Q-GADMM trainer (paper Algorithm 1, eqs. 14-18).
+
+Workers live on the 'worker' axis of a factored ('worker', 'fsdp', 'model')
+mesh (repro.launch.mesh.factor_mesh); each worker's replica of the model is
+FSDP+TP sharded inside its device group.  One train step is the Q-SGADMM
+iteration (paper Sec. IV / V-B):
+
+  * heads (chain positions 0, 2, ...) run `local_iters` Adam steps on the
+    stochastic augmented Lagrangian of eq. 14 (their own data shard plus dual
+    and proximal terms to the *reconstructed* neighbor models),
+  * heads quantize theta - theta_hat_prev with the stochastic quantizer of
+    repro.core.quantizer and transmit (q, R, b) — the uint8 level tensor is
+    flattened into one wire buffer per worker and exchanged with both chain
+    neighbors over jax.lax.ppermute (the compiled HLO carries u8
+    collective-permutes: only quantized payloads touch the interconnect),
+  * tails (positions 1, 3, ...) do the same against the heads' fresh hats,
+  * every worker applies the damped dual update of eq. 18
+    (lam += alpha * rho * (hat_n - hat_{n+1})).
+
+Both endpoints of every edge reconstruct the transmitted model with
+repro.core.quantizer.dequantize_tensor from their own synchronized copy of the
+sender's previous hat, so sender and receiver stay bit-identical — the
+algorithm's key invariant.
+
+`mode="jacobi"` collapses the two masked phases into one simultaneous update
+of all workers (benchmarks/bench_jacobi.py measures the trade-off), and
+`num_workers=1` degenerates to plain FSDP data-parallel Adam with no chain
+collectives at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.gadmm import GADMMConfig, bits_per_round
+from repro.core.quantizer import _next_bits, dequantize_tensor, quantize_tensor
+from repro.kernels.pack.ref import pack4_ref, unpack4_ref
+
+from . import sharding as sh
+
+Array = jax.Array
+
+_ADAM_B1, _ADAM_B2, _ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Static configuration of the distributed Q-GADMM trainer.
+
+    num_workers: GADMM chain length == size of the mesh 'worker' axis.
+    gadmm:       rho / quantizer / dual-damping configuration (shared with the
+                 single-host reference implementations in repro.core).
+    local_iters: Adam steps per worker per phase (paper Sec. IV, Q-SGADMM).
+    local_lr:    local Adam learning rate.
+    mode:        'gauss-seidel' (paper: masked head/tail phases) or 'jacobi'
+                 (one simultaneous phase; half the per-step compute).
+    microbatches:gradient accumulation inside each local step.
+    radius_mode: 'global' = one R per worker per round (paper-faithful);
+                 'per_tensor' = one R per parameter tensor (tighter ranges,
+                 beyond-paper; costs 32 bits/tensor of header).
+    state_dtype: cast chain state (theta/hat/duals) to this dtype (e.g.
+                 bf16); None keeps the model's param dtype.
+    uneven_shard:allow GSPMD-padded uneven sharding of parameter dims.
+    pack_wire:   nibble-pack the uint8 wire when bits <= 4 (halves bytes).
+    seq_shard:   additionally shard the batch sequence dim over 'model'.
+    """
+
+    num_workers: int
+    gadmm: GADMMConfig
+    local_iters: int = 1
+    local_lr: float = 1e-3
+    mode: str = "gauss-seidel"
+    microbatches: int = 1
+    radius_mode: str = "global"
+    state_dtype: Any = None
+    uneven_shard: bool = False
+    pack_wire: bool = False
+    seq_shard: bool = False
+
+    def __post_init__(self):
+        assert self.mode in ("gauss-seidel", "jacobi"), self.mode
+        assert self.radius_mode in ("global", "per_tensor"), self.radius_mode
+        # The chain wire is always dense; top-k sparsification only exists in
+        # the single-host reference (gadmm._quantize_rows) so far.
+        assert self.gadmm.topk_frac >= 1.0, \
+            "topk sparsification is not supported by the distributed trainer"
+        if self.pack_wire and self.gadmm.quantize:
+            q = self.gadmm.qcfg
+            max_b = q.max_bits if q.adapt_bits else q.bits
+            assert max_b <= 4, "pack_wire needs <= 4-bit levels"
+
+
+class DistState(NamedTuple):
+    """Replicated-per-worker chain state; every pytree leaf is stacked with a
+    leading (num_workers,) dim sharded over the mesh 'worker' axis."""
+
+    theta: Any      # current primal parameters
+    theta_hat: Any  # own last-quantized model (== what neighbors hold)
+    hat_left: Any   # reconstruction of left neighbor's hat (zeros at w=0)
+    hat_right: Any  # reconstruction of right neighbor's hat (zeros at w=W-1)
+    lam_left: Any   # dual on edge (w-1, w); row 0 stays zero
+    lam_right: Any  # dual on edge (w, w+1); row W-1 stays zero
+    radius: Array   # (W,) global mode | (W, n_tensors) per_tensor mode
+    bits: Array     # (W,) int32
+    opt_mu: Any     # local Adam first moment
+    opt_nu: Any     # local Adam second moment
+    opt_t: Array    # (W,) int32 Adam step counts
+    key: Array      # PRNG key (stochastic rounding)
+    step: Array     # () int32
+
+
+def init_state(init_fn: Callable[[Array], Any], key: Array,
+               dcfg: DistConfig) -> DistState:
+    """State at k=0: every worker starts from the same init, hats at zero
+    (the paper initializes theta_hat^0 = 0)."""
+    w = dcfg.num_workers
+    k_init, k_state = jax.random.split(key)
+    params = init_fn(k_init)
+    if dcfg.state_dtype is not None:
+        params = jax.tree.map(
+            lambda a: a.astype(dcfg.state_dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    theta = jax.tree.map(
+        lambda a: jnp.tile(a[None], (w,) + (1,) * a.ndim), params)
+    zeros = lambda: jax.tree.map(jnp.zeros_like, theta)
+    n_tensors = len(jax.tree.leaves(theta))
+    radius = (jnp.zeros((w,), jnp.float32) if dcfg.radius_mode == "global"
+              else jnp.zeros((w, n_tensors), jnp.float32))
+    return DistState(
+        theta=theta, theta_hat=zeros(), hat_left=zeros(), hat_right=zeros(),
+        lam_left=zeros(), lam_right=zeros(), radius=radius,
+        bits=jnp.full((w,), dcfg.gadmm.qcfg.bits, jnp.int32),
+        opt_mu=zeros(), opt_nu=zeros(),
+        opt_t=jnp.zeros((w,), jnp.int32),
+        key=k_state, step=jnp.zeros((), jnp.int32))
+
+
+# ------------------------------------------------------------- tree utils ---
+def _bmask(m: Array, leaf: Array) -> Array:
+    return m.reshape(m.shape + (1,) * (leaf.ndim - m.ndim))
+
+
+def _twhere(m: Array, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(_bmask(m, x), x, y), a, b)
+
+
+def _tvdot(a, b) -> Array:
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a, b))
+    return sum(parts) if parts else jnp.zeros(())
+
+
+def _tsqnorm(a, b) -> Array:
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(
+            (x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2), a, b))
+    return sum(parts) if parts else jnp.zeros(())
+
+
+class QGADMMTrainer:
+    """Decentralized trainer for one model over the factored worker mesh.
+
+    model: a repro.models module (init / loss_fn(params, batch, cfg)).
+    cfg:   its ArchConfig.
+    dcfg:  DistConfig above.
+    worker_mesh: ('worker', 'fsdp', 'model') mesh from factor_mesh.
+    """
+
+    def __init__(self, model, cfg, dcfg: DistConfig, worker_mesh: Mesh):
+        self.model = model
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.mesh = worker_mesh
+
+    # ------------------------------------------------------------ specs ----
+    def batch_specs(self, batch):
+        seq_axes = ("model",) if self.dcfg.seq_shard else None
+
+        def leaf(a):
+            rules = [(0, ("worker",)), (1, ("fsdp",))]
+            if seq_axes and a.ndim >= 3:
+                rules.append((2, seq_axes))
+            return sh._assign(a.shape, rules, self.mesh)
+
+        return jax.tree.map(leaf, batch)
+
+    def state_specs(self, state: DistState) -> DistState:
+        au = self.dcfg.uneven_shard
+        pspec = functools.partial(sh.tree_specs, leaf_rule=sh.leaf_train_spec,
+                                  mesh=self.mesh, allow_uneven=au)
+        wspec = P("worker") if self.dcfg.num_workers > 1 else P(None)
+        return DistState(
+            theta=pspec(state.theta), theta_hat=pspec(state.theta_hat),
+            hat_left=pspec(state.hat_left), hat_right=pspec(state.hat_right),
+            lam_left=pspec(state.lam_left), lam_right=pspec(state.lam_right),
+            radius=(wspec if state.radius.ndim == 1
+                    else P(*wspec, None)),
+            bits=wspec, opt_mu=pspec(state.opt_mu), opt_nu=pspec(state.opt_nu),
+            opt_t=wspec, key=P(None), step=P())
+
+    def _shardings(self, specs):
+        return sh.tree_shardings(specs, self.mesh)
+
+    def place(self, state: DistState, batch):
+        """device_put state + batch onto the worker mesh."""
+        state = jax.device_put(state, self._shardings(self.state_specs(state)))
+        batch = jax.tree.map(jnp.asarray, batch)
+        batch = jax.device_put(batch, self._shardings(self.batch_specs(batch)))
+        return state, batch
+
+    # ------------------------------------------------------------- wire ----
+    def _group_size(self) -> int:
+        return int(self.mesh.shape.get("fsdp", 1)
+                   * self.mesh.shape.get("model", 1))
+
+    def _flatten_wire(self, leaves, dtype):
+        """[(W, ...)] -> one (W, D_pad) buffer (+ optional nibble packing)."""
+        w = self.dcfg.num_workers
+        flat = jnp.concatenate([l.reshape(w, -1).astype(dtype) for l in leaves],
+                               axis=1)
+        if dtype == jnp.uint8 and self.dcfg.pack_wire:
+            flat = jax.vmap(pack4_ref)(flat)
+        pad = sh.pad_to_multiple(flat.shape[1], self._group_size())
+        if pad != flat.shape[1]:
+            flat = jnp.pad(flat, ((0, 0), (0, pad - flat.shape[1])))
+        return flat
+
+    def _unflatten_wire(self, wire, templates):
+        """(W, D_pad) -> [(W, ...)] leaves shaped like `templates`."""
+        n = sum(int(np.prod(t.shape[1:])) for t in templates)
+        if wire.dtype == jnp.uint8 and self.dcfg.pack_wire:
+            packed_len = 128 * (-(-n // 256))  # pack4_ref wire length
+            wire = jax.vmap(lambda p: unpack4_ref(p[:packed_len], n))(wire)
+        out, off = [], 0
+        for t in templates:
+            size = int(np.prod(t.shape[1:]))
+            out.append(wire[:, off:off + size].reshape(t.shape))
+            off += size
+        return out
+
+    def _make_exchange(self, sharded: bool):
+        """payload pytree of (W, ...) arrays -> (from_left, from_right).
+
+        from_left[w] = payload[w-1] (zeros at w=0); from_right[w] =
+        payload[w+1] (zeros at w=W-1).  The sharded path sends each device's
+        shard to the matching device of the neighbor worker group with
+        jax.lax.ppermute — uint8 payloads stay uint8 on the wire.
+        """
+        w = self.dcfg.num_workers
+        if not sharded:
+            def exchange(payload):
+                down = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [jnp.zeros_like(x[:1]), x[:-1]], axis=0), payload)
+                up = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x[1:], jnp.zeros_like(x[:1])], axis=0), payload)
+                return down, up
+            return exchange
+
+        mesh = self.mesh
+        perm_r = [(i, i + 1) for i in range(w - 1)]
+        perm_l = [(i + 1, i) for i in range(w - 1)]
+
+        def spec_of(a):
+            if a.ndim == 2 and a.shape[1] % self._group_size() == 0:
+                return P("worker", ("fsdp", "model"))
+            return P("worker", *(None,) * (a.ndim - 1))
+
+        def exchange(payload):
+            specs = jax.tree.map(spec_of, payload)
+
+            def body(p):
+                from_left = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, "worker", perm_r), p)
+                from_right = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, "worker", perm_l), p)
+                return from_left, from_right
+
+            return shard_map(body, mesh=mesh, in_specs=(specs,),
+                             out_specs=(specs, specs),
+                             check_rep=False)(payload)
+
+        return exchange
+
+    # ------------------------------------------------------- quantization --
+    def _quantize_all(self, theta, hat, bits_prev, radius_prev, key):
+        """Quantize every worker row; returns (q_leaves, hat_new, r_new, b_new).
+
+        r_new: (W,) in global mode, (W, L) per_tensor.  Bit adaptation (paper
+        eq. 11) always tracks the global radius ratio.
+        """
+        qcfg = self.dcfg.gadmm.qcfg
+        w = self.dcfg.num_workers
+        leaves = jax.tree.leaves(theta)
+        treedef = jax.tree.structure(theta)
+        hat_leaves = treedef.flatten_up_to(hat)
+        per_leaf_r = jnp.stack([
+            jax.vmap(lambda x, h: jnp.max(jnp.abs(
+                x.astype(jnp.float32) - h.astype(jnp.float32))))(x, h)
+            for x, h in zip(leaves, hat_leaves)], axis=1)  # (W, L)
+        r_global = jnp.max(per_leaf_r, axis=1)             # (W,)
+        if qcfg.adapt_bits:
+            r_prev = (radius_prev if radius_prev.ndim == 1
+                      else jnp.max(radius_prev, axis=1))
+            b_new = _next_bits(qcfg, bits_prev, r_global, r_prev)  # (W,)
+        else:
+            b_new = jnp.full((w,), qcfg.bits, jnp.int32)
+        r_new = r_global if self.dcfg.radius_mode == "global" else per_leaf_r
+        keys = jax.random.split(key, max(len(leaves), 1))
+        qs, hats = [], []
+        for i, (x, h) in enumerate(zip(leaves, hat_leaves)):
+            r_i = r_global if r_new.ndim == 1 else r_new[:, i]
+            q, hh = jax.vmap(
+                lambda xx, hh_, kk, rr, bb: quantize_tensor(
+                    xx, hh_, kk, radius=rr, bits=bb)
+            )(x, h, jax.random.split(keys[i], w), r_i, b_new)
+            qs.append(q)
+            hats.append(hh)
+        return (qs, jax.tree.unflatten(treedef, hats), r_new, b_new)
+
+    def _dequantize_all(self, q_leaves, hat_copy, radius, bits):
+        """Receiver-side reconstruction against the stored neighbor hats."""
+        treedef = jax.tree.structure(hat_copy)
+        hat_leaves = treedef.flatten_up_to(hat_copy)
+        outs = []
+        for i, (q, h) in enumerate(zip(q_leaves, hat_leaves)):
+            r_i = radius if radius.ndim == 1 else radius[:, i]
+            outs.append(jax.vmap(
+                lambda qq, hh, rr, bb: dequantize_tensor(
+                    qq, hh, radius=rr, bits=bb))(q, h, r_i, bits))
+        return jax.tree.unflatten(treedef, outs)
+
+    # ------------------------------------------------------------- step ----
+    def _data_loss(self, theta_w, batch_w):
+        mb = self.dcfg.microbatches
+        if mb <= 1:
+            return self.model.loss_fn(theta_w, batch_w, self.cfg)
+        split = jax.tree.map(
+            lambda a: a.reshape((mb, a.shape[0] // mb) + a.shape[1:]), batch_w)
+
+        def body(acc, b):
+            return acc + self.model.loss_fn(theta_w, b, self.cfg), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros(()), split)
+        return total / mb
+
+    def _local_loss(self, theta_w, batch_w, lam_l, lam_r, hat_l, hat_r,
+                    has_l, has_r):
+        """Stochastic augmented Lagrangian of eq. 14/16 for one worker."""
+        rho = self.dcfg.gadmm.rho
+        f = self._data_loss(theta_w, batch_w)
+        dual = (_tvdot(lam_l, jax.tree.map(jnp.subtract, hat_l, theta_w))
+                + _tvdot(lam_r, jax.tree.map(jnp.subtract, theta_w, hat_r)))
+        prox = 0.5 * rho * (has_l * _tsqnorm(hat_l, theta_w)
+                            + has_r * _tsqnorm(theta_w, hat_r))
+        return f + dual + prox, f
+
+    def _local_opt(self, theta, mu, nu, t, batch_w, lam_l, lam_r, hat_l,
+                   hat_r, has_l, has_r):
+        """local_iters Adam steps on the augmented Lagrangian (one worker)."""
+        lr = self.dcfg.local_lr
+        grad_fn = jax.value_and_grad(self._local_loss, has_aux=True)
+
+        def body(carry, _):
+            th, m, v, tt = carry
+            (_, f), g = grad_fn(th, batch_w, lam_l, lam_r, hat_l, hat_r,
+                                has_l, has_r)
+            tt = tt + 1
+            tf = tt.astype(jnp.float32)
+            m = jax.tree.map(
+                lambda mm, gg: _ADAM_B1 * mm + (1 - _ADAM_B1) * gg, m, g)
+            v = jax.tree.map(
+                lambda vv, gg: _ADAM_B2 * vv + (1 - _ADAM_B2) * gg * gg, v, g)
+            th = jax.tree.map(
+                lambda t_, mm, vv: (t_ - lr * (mm / (1 - _ADAM_B1 ** tf))
+                                    / (jnp.sqrt(vv / (1 - _ADAM_B2 ** tf))
+                                       + _ADAM_EPS)).astype(t_.dtype),
+                th, m, v)
+            return (th, m, v, tt), f
+
+        (theta, mu, nu, t), fs = jax.lax.scan(
+            body, (theta, mu, nu, t), None, length=self.dcfg.local_iters)
+        return theta, mu, nu, t, fs[0]
+
+    def make_train_step(self):
+        """Unsharded (single-process) reference step: identical math to the
+        sharded step, neighbor exchange via array shifts instead of ppermute."""
+        return self._build_step(sharded=False)
+
+    def jit_train_step(self, state: DistState, batch):
+        """Jitted sharded step; state/batch may be arrays or ShapeDtypeStructs
+        (AOT lowering for dry runs)."""
+        ss = self._shardings(self.state_specs(state))
+        bs = self._shardings(self.batch_specs(batch))
+        return jax.jit(self._build_step(sharded=True),
+                       in_shardings=(ss, bs), out_shardings=(ss, None))
+
+    def _build_step(self, sharded: bool):
+        dcfg = self.dcfg
+        g = dcfg.gadmm
+        w = dcfg.num_workers
+        if sharded and "worker" in self.mesh.shape:
+            assert self.mesh.shape["worker"] == w, (
+                f"mesh worker axis {self.mesh.shape['worker']} != "
+                f"num_workers {w}")
+        idx = np.arange(w)
+        has_l = jnp.asarray(idx > 0)
+        has_r = jnp.asarray(idx < w - 1)
+        is_head = jnp.asarray(idx % 2 == 0)
+        all_on = jnp.ones((w,), bool)
+        exchange = self._make_exchange(sharded) if w > 1 else None
+
+        def phase(st, batch, active, key):
+            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+             mu, nu, t) = st
+            new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
+                theta, mu, nu, t, batch, lam_l, lam_r, hat_l, hat_r,
+                has_l.astype(jnp.float32), has_r.astype(jnp.float32))
+            theta = _twhere(active, new_theta, theta)
+            mu = _twhere(active, new_mu, mu)
+            nu = _twhere(active, new_nu, nu)
+            t = jnp.where(active, new_t, t)
+
+            if g.quantize:
+                q_leaves, hat_new, r_new, b_new = self._quantize_all(
+                    theta, hat, bits, radius, key)
+                hat = _twhere(active, hat_new, hat)
+                radius = jnp.where(_bmask(active, r_new), r_new, radius)
+                bits = jnp.where(active, b_new, bits)
+                payload = {"wire": self._flatten_wire(q_leaves, jnp.uint8),
+                           "radius": r_new, "bits": b_new}
+            else:
+                # full-precision GADMM: track the would-be radius for metrics,
+                # then "transmit" theta itself (hat == theta).
+                per_leaf_r = jnp.stack([
+                    jax.vmap(lambda x, h: jnp.max(jnp.abs(
+                        x.astype(jnp.float32) - h.astype(jnp.float32))))(x, h)
+                    for x, h in zip(jax.tree.leaves(theta),
+                                    jax.tree.leaves(hat))], axis=1)  # (W, L)
+                hat = _twhere(active, theta, hat)
+                r_new = (per_leaf_r.max(1) if radius.ndim == 1 else per_leaf_r)
+                radius = jnp.where(_bmask(active, r_new), r_new, radius)
+                payload = {"wire": self._flatten_wire(
+                    jax.tree.leaves(hat), jnp.float32)}
+
+            if exchange is not None:
+                from_l, from_r = exchange(payload)
+                # active[w-1] / active[w+1]: did my neighbor transmit?
+                sent_l = jnp.concatenate([jnp.zeros((1,), bool), active[:-1]])
+                sent_r = jnp.concatenate([active[1:], jnp.zeros((1,), bool)])
+                templates = jax.tree.leaves(theta)
+                if g.quantize:
+                    ql = self._unflatten_wire(from_l["wire"], templates)
+                    qr = self._unflatten_wire(from_r["wire"], templates)
+                    hat_l = _twhere(sent_l & has_l, self._dequantize_all(
+                        ql, hat_l, from_l["radius"], from_l["bits"]), hat_l)
+                    hat_r = _twhere(sent_r & has_r, self._dequantize_all(
+                        qr, hat_r, from_r["radius"], from_r["bits"]), hat_r)
+                else:
+                    hl_leaves = self._unflatten_wire(from_l["wire"], templates)
+                    hr_leaves = self._unflatten_wire(from_r["wire"], templates)
+                    treedef = jax.tree.structure(theta)
+                    cast = lambda ls, ref: jax.tree.unflatten(
+                        treedef, [l.astype(r.dtype) for l, r in
+                                  zip(ls, jax.tree.leaves(ref))])
+                    hat_l = _twhere(sent_l & has_l, cast(hl_leaves, hat_l),
+                                    hat_l)
+                    hat_r = _twhere(sent_r & has_r, cast(hr_leaves, hat_r),
+                                    hat_r)
+            return (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+                    mu, nu, t), f0
+
+        def step(state: DistState, batch):
+            key, k1, k2 = jax.random.split(state.key, 3)
+            st = (state.theta, state.theta_hat, state.hat_left,
+                  state.hat_right, state.lam_left, state.lam_right,
+                  state.radius, state.bits, state.opt_mu, state.opt_nu,
+                  state.opt_t)
+            if dcfg.mode == "gauss-seidel" and w > 1:
+                st, f0 = phase(st, batch, is_head, k1)
+                st, _ = phase(st, batch, ~is_head, k2)
+            else:
+                st, f0 = phase(st, batch, all_on, k1)
+            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+             mu, nu, t) = st
+
+            # damped dual update (eq. 18) from reconstructed hats; both ends
+            # of each edge apply the same increment, keeping duals in sync.
+            scale = g.alpha * g.rho
+            lam_r = jax.tree.map(
+                lambda l, a, b: l + scale * _bmask(has_r, l)
+                * (a.astype(l.dtype) - b.astype(l.dtype)), lam_r, hat, hat_r)
+            lam_l = jax.tree.map(
+                lambda l, a, b: l + scale * _bmask(has_l, l)
+                * (a.astype(l.dtype) - b.astype(l.dtype)), lam_l, hat_l, hat)
+
+            resid = jnp.sqrt(sum(jax.tree.leaves(jax.tree.map(
+                lambda a, b: jnp.sum(_bmask(has_r, a)
+                                     * (a.astype(jnp.float32)
+                                        - b.astype(jnp.float32)) ** 2),
+                hat, hat_r))) + 0.0)
+            metrics = {
+                "loss": jnp.mean(f0),
+                "consensus_resid": resid,
+                "radius_mean": jnp.mean(radius),
+                "bits_mean": jnp.mean(bits.astype(jnp.float32)),
+                "wire_bits_per_round": jnp.asarray(
+                    self.wire_bits_per_round(theta), jnp.float32),
+            }
+            new_state = DistState(
+                theta=theta, theta_hat=hat, hat_left=hat_l, hat_right=hat_r,
+                lam_left=lam_l, lam_right=lam_r, radius=radius, bits=bits,
+                opt_mu=mu, opt_nu=nu, opt_t=t, key=key, step=state.step + 1)
+            return new_state, metrics
+
+        return step
+
+    def wire_bits_per_round(self, theta) -> int:
+        """Chain traffic per iteration under the unified payload accounting
+        (repro.core.quantizer.payload_bits / gadmm.bits_per_round).
+        per_tensor radius mode transmits one extra f32 R per tensor beyond
+        the single global R that bits_per_round already bills."""
+        leaves = jax.tree.leaves(theta)
+        d = sum(int(np.prod(l.shape[1:])) for l in leaves)
+        total = bits_per_round(self.dcfg.gadmm, self.dcfg.num_workers, d)
+        if self.dcfg.gadmm.quantize and self.dcfg.radius_mode == "per_tensor":
+            total += self.dcfg.num_workers * 32 * (len(leaves) - 1)
+        return total

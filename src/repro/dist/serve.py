@@ -1,0 +1,157 @@
+"""Serving runtime: batched prefill + KV/state-cached decode on a
+('data', 'model') mesh.
+
+The Server owns the sharding policy: parameters are tensor-parallel over
+'model' (replicated over 'data'), request batches and caches are sharded over
+'data', and logits come back batch-sharded.  All model math lives in
+repro.models; this module only places it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import serve_mesh
+from repro.models import layers as L
+
+from . import sharding as sh
+
+
+def serve_view(mesh: Mesh) -> Mesh:
+    """('data','model') serving view of any production mesh (pods fold into
+    the data axis); identity on an already-2D mesh."""
+    return serve_mesh(mesh)
+
+
+def _batch_dim_spec(n: int, mesh: Mesh, extra_dims: int) -> P:
+    """P('data', None...) when the batch divides the data axis, else fully
+    replicated (tiny/ragged batches)."""
+    data = mesh.shape.get("data", 1)
+    lead = "data" if (data > 1 and n % data == 0) else None
+    return P(lead, *(None,) * extra_dims)
+
+
+def cache_specs(cache, mesh: Mesh, batch_size: int,
+                seq_parallel: bool = False):
+    """PartitionSpecs for a decode cache pytree.
+
+    The batch dim (found by size, searching dims 1, 2, 0 — caches are stacked
+    (layers, batch, ...) or (periods, inner, batch, ...)) shards over 'data';
+    a trailing heads dim shards over 'model' when divisible.  seq_parallel
+    instead shards the key/value sequence dim (-3) over 'data' — the
+    batch=1, 500k-context decode layout.
+    """
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def leaf(a):
+        spec = [None] * a.ndim
+        if seq_parallel and a.ndim >= 4 and a.shape[-3] > 1 \
+                and a.shape[-3] % data == 0:
+            spec[a.ndim - 3] = "data"
+        elif data > 1:
+            for i in (1, 2, 0):
+                if i < a.ndim and a.shape[i] == batch_size \
+                        and batch_size % data == 0:
+                    spec[i] = "data"
+                    break
+        if (model > 1 and a.ndim >= 2 and spec[a.ndim - 2] is None
+                and a.shape[-2] >= model and a.shape[-2] % model == 0):
+            spec[a.ndim - 2] = "model"
+        return P(*spec)
+
+    return jax.tree.map(leaf, cache)
+
+
+class Server:
+    """Inference server for one model on a serving mesh.
+
+    jit_prefill / jit_decode return AOT-friendly jitted callables whose
+    in/out shardings pin params to tensor-parallel layout and activations,
+    logits, and caches to batch-sharded layout.  Template arguments may be
+    ShapeDtypeStructs (dry-run lowering) or concrete arrays.
+    """
+
+    def __init__(self, *, model, cfg, mesh: Mesh, batch_size: int):
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch_size = batch_size
+
+    # ---------------------------------------------------------- shardings --
+    def param_specs(self, params):
+        return sh.tree_specs(params, sh.leaf_serve_spec, self.mesh)
+
+    def param_shardings(self, params):
+        return sh.tree_shardings(self.param_specs(params), self.mesh)
+
+    def batch_shardings(self, batch):
+        return jax.tree.map(
+            lambda a: NamedSharding(self.mesh, _batch_dim_spec(
+                a.shape[0], self.mesh, a.ndim - 1)), batch)
+
+    def _logits_sharding(self, batch_size: int):
+        return NamedSharding(self.mesh, _batch_dim_spec(
+            batch_size, self.mesh, 1))
+
+    def _act_sharding(self, batch_size: int):
+        return NamedSharding(self.mesh, _batch_dim_spec(
+            batch_size, self.mesh, 2))
+
+    # ------------------------------------------------------------ prefill --
+    def _prefill_fn(self, batch_size: int):
+        model, cfg = self.model, self.cfg
+
+        def fn(params, batch):
+            L.set_activation_sharding(self._act_sharding(batch_size))
+            try:
+                if cfg.family in ("vlm", "audio"):
+                    logits, cache = model.prefill(params, batch, cfg)
+                else:
+                    logits, cache = model.prefill(params, batch["tokens"], cfg)
+            finally:
+                L.set_activation_sharding(None)
+            return logits, cache
+
+        return fn
+
+    def jit_prefill(self, params, batch, batch_size: int = 0):
+        """-> jitted (params, batch) -> (last-token logits (B, vocab), cache).
+
+        batch_size defaults to the Server's; passing one overrides every
+        layout decision consistently (logits, activations, cache)."""
+        batch_size = batch_size or self.batch_size
+        fn = self._prefill_fn(batch_size)
+        cache_struct = jax.eval_shape(fn, params, batch)[1]
+        cshard = sh.tree_shardings(
+            cache_specs(cache_struct, self.mesh, batch_size), self.mesh)
+        return jax.jit(
+            fn,
+            in_shardings=(self.param_shardings(params),
+                          self.batch_shardings(batch)),
+            out_shardings=(self._logits_sharding(batch_size), cshard))
+
+    # ------------------------------------------------------------- decode --
+    def jit_decode(self, params, cache, batch_size: int = 0,
+                   seq_parallel: bool = False):
+        """-> jitted (params, token (B,), cache, pos (B,)) -> (logits, cache)."""
+        model, cfg = self.model, self.cfg
+        batch_size = batch_size or self.batch_size
+
+        def fn(params, token, cache, pos):
+            L.set_activation_sharding(self._act_sharding(batch_size))
+            try:
+                return model.decode_step(params, token, cache, pos, cfg)
+            finally:
+                L.set_activation_sharding(None)
+
+        cshard = sh.tree_shardings(
+            cache_specs(cache, self.mesh, batch_size, seq_parallel), self.mesh)
+        tok_shard = NamedSharding(self.mesh, _batch_dim_spec(
+            batch_size, self.mesh, 0))
+        return jax.jit(
+            fn,
+            in_shardings=(self.param_shardings(params), tok_shard, cshard,
+                          tok_shard),
+            out_shardings=(self._logits_sharding(batch_size), cshard))

@@ -112,6 +112,24 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = "
                      r"((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*)) (\w[\w\-]*)\(")
 _DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+# One operand: optional "f32[2,3]{1,0} " type prefix (newer XLA prints typed
+# operand lists), then the %name.
+_TYPED_OPERAND_RE = re.compile(
+    r"^(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+)")
+
+
+def _operand_list(line: str, opkind: str):
+    """[(type_shape_or_None, name)] for the op's operands; shapes inline in
+    the operand list (typed HLO) take precedence over name lookup."""
+    m = re.search(re.escape(opkind) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    out = []
+    for tok in m.group(1).split(", "):
+        om = _TYPED_OPERAND_RE.match(tok.strip())
+        if om:
+            out.append((om.group(1), om.group(2)))
+    return out
 
 _SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
                    "bitcast", "copy-done", "after-all", "partition-id"}
@@ -159,19 +177,20 @@ def hlo_cost(text: str) -> dict:
                     # trip_count x buffer): use the update operand's shape
                     # (operand 2 for DUS, operand 3 for scatter).
                     skip = 2 if opkind == "scatter" else 1
-                    om = re.search(
-                        opkind + r"\(" + r"\s*%?[\w.\-]+,\s*" * skip
-                        + r"%?([\w.\-]+)", line)
-                    if om and om.group(1) in shapes:
-                        eff = shapes[om.group(1)]
+                    ops = _operand_list(line, opkind)
+                    if len(ops) > skip:
+                        tshape, opnd = ops[skip]
+                        eff = tshape or shapes.get(opnd, eff)
                 bytes_ += 2 * _shape_bytes(eff) * mult
             if opkind == "dot":
                 cd = _DOT_DIMS_RE.search(line)
-                # first operand name
-                om = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+                ops = _operand_list(line, "dot")
+                lhs_shape = None
+                if ops:
+                    tshape, opnd = ops[0]
+                    lhs_shape = tshape or shapes.get(opnd)
                 k = 1
-                if cd and om and om.group(1) in shapes:
-                    lhs_shape = shapes[om.group(1)]
+                if cd and lhs_shape:
                     sm = _SHAPE_RE.search(lhs_shape)
                     if sm and sm.group(2):
                         dims = [int(x) for x in sm.group(2).split(",")]

@@ -1,7 +1,9 @@
 """Wireless comm/energy model tests (paper Sec. V-A accounting)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import comm_model as cm
 from repro.core.topology import random_placement

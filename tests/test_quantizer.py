@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quantizer as Q
 
@@ -96,6 +99,11 @@ def test_bit_growth_rule():
 
 
 def test_payload_bits():
+    """Header = 32 (R) + 32 more only when bits adapt — one rule, shared with
+    gadmm.bits_per_round."""
     cfg = Q.QuantizerConfig(bits=2)
-    assert Q.payload_bits(cfg, 1000) == 2064
-    assert Q.payload_bits(8, 10) == 144
+    assert Q.payload_bits(cfg, 1000) == 2032
+    assert Q.payload_bits(8, 10) == 112
+    adaptive = Q.QuantizerConfig(bits=2, adapt_bits=True)
+    assert Q.payload_bits(adaptive, 1000) == 2064
+    assert Q.payload_bits(8, 10, adapt_bits=True) == 144

@@ -1,0 +1,103 @@
+"""Cross-implementation contracts of the stochastic quantizer.
+
+core.quantizer (pure jnp, used by the dist trainer), kernels/quantize (fused
+Pallas kernel), and the receiver-side dequantize must agree exactly — the
+sender==receiver bit-sync is the algorithm's key invariant.  No hypothesis
+dependency: these must run in a bare environment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gadmm
+from repro.core import quantizer as Q
+from repro.kernels.quantize import ops as q_ops
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_core_quantizer_matches_pallas_kernel(bits, dtype):
+    """quantize_tensor and the fused kernel (interpret mode) produce identical
+    q and theta_hat for shared inputs — same RNG stream, same rounding."""
+    key = jax.random.PRNGKey(bits * 7 + (dtype == jnp.bfloat16))
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = jax.random.normal(k1, (3, 257)).astype(dtype)
+    hat = (0.5 * jax.random.normal(k2, (3, 257))).astype(dtype)
+    r = jnp.max(jnp.abs(theta.astype(jnp.float32) - hat.astype(jnp.float32)))
+    q_core, hat_core = Q.quantize_tensor(
+        theta, hat, k3, radius=r, bits=jnp.asarray(bits, jnp.int32))
+    q_pal, hat_pal = q_ops.quantize_dequantize(theta, hat, k3, r, bits,
+                                               impl="pallas")
+    np.testing.assert_array_equal(np.asarray(q_core), np.asarray(q_pal))
+    assert hat_core.dtype == hat_pal.dtype == dtype
+    atol = 2e-5 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(hat_core, np.float32),
+                               np.asarray(hat_pal, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("bits", [2, 8])
+def test_zero_radius_contract(bits):
+    """Both implementations transmit all-zero q and keep hat unchanged at
+    R == 0 (converged worker)."""
+    theta = jnp.full((130,), 0.25)
+    hat = jnp.full((130,), 0.25)
+    r = jnp.zeros(())
+    q_core, hat_core = Q.quantize_tensor(
+        theta, hat, jax.random.PRNGKey(0), radius=r,
+        bits=jnp.asarray(bits, jnp.int32))
+    q_pal, hat_pal = q_ops.quantize_dequantize(theta, hat, jax.random.PRNGKey(0),
+                                               r, bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(q_core), 0)
+    np.testing.assert_array_equal(np.asarray(q_pal), 0)
+    np.testing.assert_array_equal(np.asarray(hat_core), np.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(hat_pal), np.asarray(theta))
+
+
+@pytest.mark.parametrize("theta_dtype", [jnp.bfloat16, jnp.float32])
+def test_mixed_precision_sender_receiver_bit_sync(theta_dtype):
+    """Regression: quantize_tensor used to reconstruct in theta.dtype while
+    dequantize_tensor used theta_hat_prev.dtype, so a bf16 theta with f32 hat
+    state drifted out of bit-sync.  Both now agree on theta_hat_prev.dtype."""
+    key = jax.random.PRNGKey(3)
+    theta = jax.random.normal(key, (512,)).astype(theta_dtype)
+    hat_prev = jnp.zeros((512,), jnp.float32)  # hat state kept in f32
+    bits = jnp.asarray(4, jnp.int32)
+    for step in range(3):
+        r = jnp.max(jnp.abs(theta.astype(jnp.float32) - hat_prev))
+        q, hat_sender = Q.quantize_tensor(theta, hat_prev, jax.random.fold_in(
+            key, step), radius=r, bits=bits)
+        hat_receiver = Q.dequantize_tensor(q, hat_prev, radius=r, bits=bits)
+        assert hat_sender.dtype == hat_receiver.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(hat_sender),
+                                      np.asarray(hat_receiver))
+        hat_prev = hat_sender
+        theta = (0.7 * theta.astype(jnp.float32)).astype(theta_dtype)
+
+
+def test_payload_accounting_unified():
+    """quantizer.payload_bits and gadmm.bits_per_round bill the same header:
+    32 bits (R) + 32 more only when bits adapt."""
+    n, d = 12, 345
+    for adapt in (False, True):
+        qcfg = Q.QuantizerConfig(bits=4, adapt_bits=adapt)
+        gcfg = gadmm.GADMMConfig(quantize=True, qcfg=qcfg)
+        assert gadmm.bits_per_round(gcfg, n, d) == n * Q.payload_bits(qcfg, d)
+        assert Q.payload_bits(qcfg, d) == 4 * d + Q.header_bits(adapt)
+
+
+def test_topk_selection_is_exact_under_ties():
+    """_quantize_rows transmits exactly k coordinates even when |delta| ties
+    would admit more (bits_per_round bills exactly k)."""
+    n, d = 3, 40
+    cfg = gadmm.GADMMConfig(quantize=True,
+                            qcfg=Q.QuantizerConfig(bits=8), topk_frac=0.25)
+    k = max(int(d * cfg.topk_frac), 1)
+    theta = jnp.ones((n, d))  # every |delta| ties at 1.0
+    hat_prev = jnp.zeros((n, d))
+    active = jnp.ones((n,), bool)
+    hat, _, _ = gadmm._quantize_rows(
+        theta, hat_prev, active, jax.random.PRNGKey(0),
+        jnp.zeros((n,)), jnp.full((n,), 8, jnp.int32), cfg)
+    changed = np.asarray(jnp.sum(hat != hat_prev, axis=1))
+    np.testing.assert_array_equal(changed, k)
