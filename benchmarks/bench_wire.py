@@ -1,0 +1,122 @@
+"""Wire-path benchmark: jnp vs fused Pallas codec through a full train step,
+and reported-vs-actual wire traffic.
+
+Times QGADMMTrainer's unsharded reference step (identical codec math to the
+sharded step; nibble packing itself runs only inside the sharded exchange's
+shard_map, so pack_wire rows here measure the codec + accounting, not the
+packing op) for every wire_impl, with and without nibble packing, and
+cross-checks `wire_bits_per_round` against the bytes the sharded exchange
+actually moves.  Results go to BENCH_wire.json (and the usual
+``name,us_per_call,derived`` CSV on stdout).
+
+On this CPU container the 'pallas' numbers are interpret-mode (correctness
+harness, expected slower); the structural win of the fused path — one
+quantize->pack pipeline over the flat (W, D) buffer instead of L per-leaf
+ops — shows up in the jnp-vs-seed-style per-leaf accounting and on real TPU
+backends ('pallas_compiled').
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.gadmm import GADMMConfig
+from repro.core.quantizer import QuantizerConfig
+from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+
+
+class _BenchModel:
+    """A few mixed-size leaves; D is dominated by 'emb' so packing wins."""
+
+    @staticmethod
+    def init(key, cfg):
+        d = cfg["d"]
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"emb": jax.random.normal(k1, (d, 16), jnp.float32),
+                "w1": jax.random.normal(k2, (16, 16), jnp.float32),
+                "b1": jax.random.normal(k3, (16,), jnp.float32)}
+
+    @staticmethod
+    def loss_fn(params, batch, cfg):
+        h = jnp.tanh(batch["x"] @ params["emb"])
+        h = h @ params["w1"] + params["b1"]
+        return jnp.mean((h.sum(-1) - batch["y"]) ** 2)
+
+
+def _timeit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(d=4096, w=4, quick=False):
+    if quick:
+        d = 512
+    cfg = {"d": d}
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("worker", "fsdp", "model"))
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (w, 8, d)),
+             "y": jax.random.normal(jax.random.PRNGKey(2), (w, 8))}
+    rows = []
+    records = []
+    for wire_impl in ("jnp", "pallas"):
+        for pack in (False, True):
+            dcfg = DistConfig(
+                num_workers=w,
+                gadmm=GADMMConfig(rho=0.5, quantize=True,
+                                  qcfg=QuantizerConfig(bits=4), alpha=0.01),
+                local_iters=1, local_lr=1e-3,
+                pack_wire=pack, wire_impl=wire_impl)
+            tr = QGADMMTrainer(_BenchModel, cfg, dcfg, mesh)
+            state = init_state(lambda k: _BenchModel.init(k, cfg),
+                               jax.random.PRNGKey(0), dcfg)
+            step = jax.jit(tr.make_train_step())
+            us = _timeit(lambda: step(state, batch)[0])
+            n_params = sum(int(np.prod(l.shape[1:]))
+                           for l in jax.tree.leaves(state.theta))
+            reported_bits = tr.wire_bits_per_round(state.theta)
+            wire = tr._finish_wire(jnp.zeros((w, n_params), jnp.uint8))
+            if pack:  # per-shard nibble packing inside the exchange
+                from repro.kernels.pack import ops as pack_ops
+
+                g = tr._group_size()
+                shard = wire[0].reshape(g, -1)[0]
+                actual_row_bytes = g * pack_ops.pack4(shard, impl="ref").size
+            else:
+                actual_row_bytes = wire.shape[1] * wire.dtype.itemsize
+            assert tr.wire_row_bytes(n_params) == actual_row_bytes
+            name = f"wire_step_{wire_impl}{'_packed' if pack else ''}"
+            derived = (f"d={n_params};reported_bits={reported_bits};"
+                       f"row_bytes={actual_row_bytes}")
+            rows.append((name, us, derived))
+            # independent actual: measured row bytes + R/b sideband, per
+            # link, direction, and phase (2 phases in gauss-seidel)
+            sideband = 32 + 32
+            actual_bits = 2 * 2 * (w - 1) * (8 * actual_row_bytes + sideband)
+            records.append(dict(
+                impl=wire_impl, pack_wire=pack, num_workers=w, d=n_params,
+                step_us=us, reported_wire_bits_per_round=reported_bits,
+                actual_row_bytes=actual_row_bytes,
+                actual_bits_per_round=actual_bits))
+    with open("BENCH_wire.json", "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(("bench_wire_json", 0, "wrote BENCH_wire.json"))
+    return rows
+
+
+def main(quick=False):
+    for name, us, derived in run(quick=quick):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ def main(argv=None) -> None:
 
     from . import (bench_compute_time, bench_dnn, bench_energy_cdf,
                    bench_jacobi, bench_kernels, bench_linreg, bench_rho,
-                   bench_workers)
+                   bench_wire, bench_workers)
 
     benches = {
         "linreg": bench_linreg.main,          # Fig. 2
@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         "rho": bench_rho.main,                # Fig. 7
         "compute_time": bench_compute_time.main,  # Fig. 8
         "kernels": bench_kernels.main,
+        "wire": bench_wire.main,              # fused wire path (this repo)
         "jacobi": bench_jacobi.main,          # beyond-paper variant
     }
     only = set(args.only.split(",")) if args.only else None

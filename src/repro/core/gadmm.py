@@ -26,7 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .quantizer import QuantizerConfig, header_bits
+from .quantizer import QuantizerConfig, _next_bits, header_bits
 
 Array = jax.Array
 
@@ -111,14 +111,10 @@ def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
     n, d = theta.shape
     diff = theta - hat_prev
     r_new = jnp.max(jnp.abs(diff), axis=1)  # (N,) per-worker inf-norm
-    if cfg.qcfg.adapt_bits:
-        lev_prev = 2.0 ** bits_prev.astype(jnp.float32) - 1.0
-        ratio = jnp.where(radius_prev > 0, r_new / jnp.maximum(radius_prev, 1e-30), 0.0)
-        b_new = jnp.ceil(jnp.log2(1.0 + lev_prev * ratio)).astype(jnp.int32)
-        b_new = jnp.clip(b_new, 1, cfg.qcfg.max_bits)
-        b_new = jnp.where(radius_prev > 0, b_new, cfg.qcfg.bits)
-    else:
-        b_new = jnp.full((n,), cfg.qcfg.bits, jnp.int32)
+    # eq. 11 bit growth: single source of truth in quantizer._next_bits
+    # (same dedup pattern as header_bits for the payload accounting).
+    b_new = jnp.broadcast_to(
+        _next_bits(cfg.qcfg, bits_prev, r_new, radius_prev), (n,))
     levels = 2.0 ** b_new.astype(jnp.float32) - 1.0
     safe_r = jnp.maximum(r_new, 1e-30)[:, None]
     step = 2.0 * safe_r / levels[:, None]

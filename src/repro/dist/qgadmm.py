@@ -8,19 +8,39 @@ iteration (paper Sec. IV / V-B):
   * heads (chain positions 0, 2, ...) run `local_iters` Adam steps on the
     stochastic augmented Lagrangian of eq. 14 (their own data shard plus dual
     and proximal terms to the *reconstructed* neighbor models),
-  * heads quantize theta - theta_hat_prev with the stochastic quantizer of
-    repro.core.quantizer and transmit (q, R, b) — the uint8 level tensor is
-    flattened into one wire buffer per worker and exchanged with both chain
-    neighbors over jax.lax.ppermute (the compiled HLO carries u8
-    collective-permutes: only quantized payloads touch the interconnect),
+  * heads quantize theta - theta_hat_prev and transmit (q, R, b),
   * tails (positions 1, 3, ...) do the same against the heads' fresh hats,
   * every worker applies the damped dual update of eq. 18
     (lam += alpha * rho * (hat_n - hat_{n+1})).
 
-Both endpoints of every edge reconstruct the transmitted model with
-repro.core.quantizer.dequantize_tensor from their own synchronized copy of the
-sender's previous hat, so sender and receiver stay bit-identical — the
-algorithm's key invariant.
+The quantized exchange is FUSED onto one flat wire buffer per worker: all
+parameter leaves are flattened into a single (W, D_pad) row per worker, and
+one fused quantize->pack->ppermute->unpack->dequantize pipeline replaces
+the L small per-leaf ops.  In the sharded step both the codec and the
+nibble packing run INSIDE shard_map — every device quantizes and packs
+exactly the wire slab it owns (the production TPU layout, and it keeps the
+codec's pad/reshape/slice internals away from the SPMD partitioner, which
+XLA:CPU miscompiles; see the RoPE note in dist.sharding).
+`DistConfig.wire_impl` selects the codec implementation — 'jnp' (pure-jnp
+reference), 'pallas' (Pallas kernels from repro.kernels.{quantize,pack} in
+interpret mode, for CPU), or 'pallas_compiled' (compiled Pallas, TPU).
+All three consume one shared uniform draw over the wire buffer, so they
+are bit-identical; per_tensor radius mode expands its per-leaf radii into
+per-element values with a segment-scalar gather before the fused call.
+When the effective bit width is <= 4 each device nibble-packs its shard
+(kernels/pack wire format, `packed_len` bytes per shard) right before the
+jax.lax.ppermute, halving the bytes on the interconnect; `pack_wire=None`
+(the default) enables this automatically.
+
+Both endpoints of every edge reconstruct the transmitted model with the same
+flat-buffer arithmetic from their own synchronized copy of the sender's
+previous hat, so sender and receiver stay bit-identical — the algorithm's
+key invariant.
+
+`overlap=True` double-buffers the gauss-seidel exchange: the heads' payload
+is put on the wire and the tails run their local Adam iterations against the
+*previous* neighbor hats while it is in flight (one-exchange staleness,
+beyond-paper), letting XLA hide the chain latency behind compute.
 
 `mode="jacobi"` collapses the two masked phases into one simultaneous update
 of all workers (benchmarks/bench_jacobi.py measures the trade-off), and
@@ -39,9 +59,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.gadmm import GADMMConfig, bits_per_round
-from repro.core.quantizer import _next_bits, dequantize_tensor, quantize_tensor
-from repro.kernels.pack.ref import pack4_ref, unpack4_ref
+from repro.core.gadmm import GADMMConfig
+from repro.core.quantizer import _next_bits
+from repro.kernels.pack import ops as pack_ops
+from repro.kernels.pack.ref import packed_len
+from repro.kernels.quantize import quantize as q_kernel
+from repro.kernels.quantize import ref as q_ref
 
 from . import sharding as sh
 
@@ -69,7 +92,16 @@ class DistConfig:
                  bf16); None keeps the model's param dtype.
     uneven_shard:allow GSPMD-padded uneven sharding of parameter dims.
     pack_wire:   nibble-pack the uint8 wire when bits <= 4 (halves bytes).
+                 None (default) = auto: packed whenever the effective bit
+                 width (max_bits if adaptive, else bits) is <= 4.
     seq_shard:   additionally shard the batch sequence dim over 'model'.
+    wire_impl:   codec for the fused quantize/pack wire path — 'jnp'
+                 (pure-jnp reference), 'pallas' (kernels in interpret mode,
+                 CPU), 'pallas_compiled' (compiled Pallas, TPU).  All three
+                 are bit-identical (shared uniform-draw convention).
+    overlap:     double-buffer the gauss-seidel exchange: tails run their
+                 local iterations against the previous neighbor hats while
+                 the heads' payload is in flight (one-exchange staleness).
     """
 
     num_workers: int
@@ -81,19 +113,29 @@ class DistConfig:
     radius_mode: str = "global"
     state_dtype: Any = None
     uneven_shard: bool = False
-    pack_wire: bool = False
+    pack_wire: bool | None = None
     seq_shard: bool = False
+    wire_impl: str = "jnp"
+    overlap: bool = False
 
     def __post_init__(self):
         assert self.mode in ("gauss-seidel", "jacobi"), self.mode
         assert self.radius_mode in ("global", "per_tensor"), self.radius_mode
+        assert self.wire_impl in ("jnp", "pallas", "pallas_compiled"), \
+            self.wire_impl
+        assert not (self.overlap and self.mode != "gauss-seidel"), \
+            "overlap (double-buffered exchange) only applies to the " \
+            "two-phase gauss-seidel mode"
         # The chain wire is always dense; top-k sparsification only exists in
         # the single-host reference (gadmm._quantize_rows) so far.
         assert self.gadmm.topk_frac >= 1.0, \
             "topk sparsification is not supported by the distributed trainer"
+        q = self.gadmm.qcfg
+        max_b = q.max_bits if q.adapt_bits else q.bits
+        if self.pack_wire is None:
+            object.__setattr__(
+                self, "pack_wire", bool(self.gadmm.quantize and max_b <= 4))
         if self.pack_wire and self.gadmm.quantize:
-            q = self.gadmm.qcfg
-            max_b = q.max_bits if q.adapt_bits else q.bits
             assert max_b <= 4, "pack_wire needs <= 4-bit levels"
 
 
@@ -165,6 +207,11 @@ def _tsqnorm(a, b) -> Array:
     return sum(parts) if parts else jnp.zeros(())
 
 
+def _leaf_sizes(leaves) -> list[int]:
+    """Flat per-worker size of each stacked (W, ...) leaf."""
+    return [int(np.prod(l.shape[1:])) for l in leaves]
+
+
 class QGADMMTrainer:
     """Decentralized trainer for one model over the factored worker mesh.
 
@@ -221,24 +268,49 @@ class QGADMMTrainer:
         return int(self.mesh.shape.get("fsdp", 1)
                    * self.mesh.shape.get("model", 1))
 
-    def _flatten_wire(self, leaves, dtype):
-        """[(W, ...)] -> one (W, D_pad) buffer (+ optional nibble packing)."""
+    def _pack_impl(self) -> str:
+        return "ref" if self.dcfg.wire_impl == "jnp" else self.dcfg.wire_impl
+
+    def _flatten_rows(self, leaves, dtype):
+        """[(W, ...)] -> one (W, D) buffer (zero-size leaves contribute 0
+        columns)."""
         w = self.dcfg.num_workers
-        flat = jnp.concatenate([l.reshape(w, -1).astype(dtype) for l in leaves],
-                               axis=1)
-        if dtype == jnp.uint8 and self.dcfg.pack_wire:
-            flat = jax.vmap(pack4_ref)(flat)
+        cols = [l.reshape(w, -1).astype(dtype) for l in leaves]
+        if not cols:
+            return jnp.zeros((w, 0), dtype)
+        return jnp.concatenate(cols, axis=1)
+
+    def _pad_wire(self, flat):
+        """Zero-pad columns so each row splits evenly across the worker's
+        (fsdp, model) device group."""
         pad = sh.pad_to_multiple(flat.shape[1], self._group_size())
         if pad != flat.shape[1]:
             flat = jnp.pad(flat, ((0, 0), (0, pad - flat.shape[1])))
         return flat
 
+    def _finish_wire(self, flat):
+        """(W, D) codec output -> the exchanged (W, D_pad) buffer.
+
+        Nibble packing happens per device shard INSIDE the exchange's
+        shard_map (see _make_exchange), never here: the SPMD partitioner
+        miscompiles the strided pack reshape/stack pattern when the wire
+        columns are sharded (same XLA:CPU bug family as the RoPE
+        split/concat note in dist.sharding), and per-shard packing is what
+        a real transport would do anyway."""
+        return self._pad_wire(flat)
+
+    def _flatten_wire(self, leaves, dtype):
+        """[(W, ...)] -> exchanged (W, D_pad) buffer (flatten + pad)."""
+        return self._finish_wire(self._flatten_rows(leaves, dtype))
+
+    def _strip_wire(self, wire, n: int):
+        """Received (W, D_pad) uint8 levels -> (W, n) (drop group padding;
+        the exchange already unpacked its per-shard nibbles)."""
+        return wire[:, :n]
+
     def _unflatten_wire(self, wire, templates):
-        """(W, D_pad) -> [(W, ...)] leaves shaped like `templates`."""
-        n = sum(int(np.prod(t.shape[1:])) for t in templates)
-        if wire.dtype == jnp.uint8 and self.dcfg.pack_wire:
-            packed_len = 128 * (-(-n // 256))  # pack4_ref wire length
-            wire = jax.vmap(lambda p: unpack4_ref(p[:packed_len], n))(wire)
+        """(W, D_pad) float buffer -> [(W, ...)] leaves shaped like
+        `templates` (full-precision GADMM wire; no packing)."""
         out, off = [], 0
         for t in templates:
             size = int(np.prod(t.shape[1:]))
@@ -246,16 +318,36 @@ class QGADMMTrainer:
             off += size
         return out
 
+    def _unflatten_cast(self, flat, like_leaves, treedef):
+        """(W, D) f32 buffer -> pytree of leaves cast to each leaf's dtype —
+        the same final cast quantize_tensor/dequantize_tensor apply, so the
+        fused path keeps the sender==receiver bit-sync per leaf."""
+        out, off = [], 0
+        for t in like_leaves:
+            size = int(np.prod(t.shape[1:]))
+            out.append(flat[:, off:off + size].reshape(t.shape)
+                       .astype(t.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
     def _make_exchange(self, sharded: bool):
         """payload pytree of (W, ...) arrays -> (from_left, from_right).
 
         from_left[w] = payload[w-1] (zeros at w=0); from_right[w] =
         payload[w+1] (zeros at w=W-1).  The sharded path sends each device's
         shard to the matching device of the neighbor worker group with
-        jax.lax.ppermute — uint8 payloads stay uint8 on the wire.
+        jax.lax.ppermute — uint8 payloads stay uint8 on the wire, and with
+        pack_wire each device nibble-packs its own shard right before the
+        ppermute and unpacks right after (pack4/unpack4 run as purely local
+        ops inside the shard_map: halved wire bytes, and no SPMD
+        partitioning of the strided pack pattern, which XLA:CPU
+        miscompiles).
         """
         w = self.dcfg.num_workers
         if not sharded:
+            # Unsharded reference: array shifts; packing would be an exact
+            # roundtrip (contract-tested in tests/test_kernels.py), so the
+            # levels move unpacked.
             def exchange(payload):
                 down = jax.tree.map(
                     lambda x: jnp.concatenate(
@@ -269,20 +361,38 @@ class QGADMMTrainer:
         mesh = self.mesh
         perm_r = [(i, i + 1) for i in range(w - 1)]
         perm_l = [(i + 1, i) for i in range(w - 1)]
+        pack_impl = self._pack_impl()
+        wire_spec = P("worker", ("fsdp", "model"))
 
         def spec_of(a):
             if a.ndim == 2 and a.shape[1] % self._group_size() == 0:
-                return P("worker", ("fsdp", "model"))
+                return wire_spec
             return P("worker", *(None,) * (a.ndim - 1))
 
         def exchange(payload):
             specs = jax.tree.map(spec_of, payload)
+            # which leaves get per-shard nibble packing (bool leaves: a
+            # PartitionSpec is a tuple subclass, so specs can't be mapped
+            # over as a second operand tree)
+            packed_leaves = jax.tree.map(
+                lambda x: bool(self.dcfg.pack_wire and x.dtype == jnp.uint8
+                               and spec_of(x) == wire_spec), payload)
 
             def body(p):
+                def send(x, do_pack, perm):
+                    if do_pack:
+                        n_loc = x.size  # local (1, D_pad / group) shard
+                        packed = pack_ops.pack4(x.reshape(-1),
+                                                impl=pack_impl)
+                        recv = jax.lax.ppermute(packed, "worker", perm)
+                        return pack_ops.unpack4(
+                            recv, n_loc, impl=pack_impl).reshape(x.shape)
+                    return jax.lax.ppermute(x, "worker", perm)
+
                 from_left = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, "worker", perm_r), p)
+                    lambda x, f: send(x, f, perm_r), p, packed_leaves)
                 from_right = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, "worker", perm_l), p)
+                    lambda x, f: send(x, f, perm_l), p, packed_leaves)
                 return from_left, from_right
 
             return shard_map(body, mesh=mesh, in_specs=(specs,),
@@ -292,22 +402,78 @@ class QGADMMTrainer:
         return exchange
 
     # ------------------------------------------------------- quantization --
-    def _quantize_all(self, theta, hat, bits_prev, radius_prev, key):
-        """Quantize every worker row; returns (q_leaves, hat_new, r_new, b_new).
+    def _per_leaf_radius(self, leaves, hat_leaves):
+        """(W, L) per-leaf inf-norm radii; zero-size leaves get R = 0 (the
+        same guard quantizer.global_radius applies)."""
+        w = self.dcfg.num_workers
+        cols = []
+        for x, h in zip(leaves, hat_leaves):
+            if int(np.prod(x.shape[1:])) == 0:
+                cols.append(jnp.zeros((w,), jnp.float32))
+            else:
+                cols.append(jax.vmap(lambda a, b: jnp.max(jnp.abs(
+                    a.astype(jnp.float32) - b.astype(jnp.float32))))(x, h))
+        if not cols:
+            return jnp.zeros((w, 0), jnp.float32)
+        return jnp.stack(cols, axis=1)
 
-        r_new: (W,) in global mode, (W, L) per_tensor.  Bit adaptation (paper
-        eq. 11) always tracks the global radius ratio.
+    def _qdq_row(self, theta_row, hat_row, u_row, radius, bits):
+        """One fused quantize-dequantize call on one (d,) wire-row slab.
+        radius is a scalar (global mode) or a (d,) per-element expansion
+        (per_tensor mode)."""
+        levels = (2.0 ** bits.astype(jnp.float32)) - 1.0
+        radius = jnp.asarray(radius, jnp.float32)
+        if self.dcfg.wire_impl == "jnp":
+            return q_ref.quantize_dequantize_ref(
+                theta_row, hat_row, u_row, radius, levels)
+        return q_kernel.quantize_dequantize(
+            theta_row, hat_row, u_row, radius, levels,
+            interpret=self.dcfg.wire_impl != "pallas_compiled")
+
+    def _qdq_sharded(self, theta_f, hat_f, u, radius, bits):
+        """Codec under shard_map: every device runs one fused
+        quantize-dequantize on exactly the (1, d_loc) wire slab it owns,
+        with its worker's radius/bits riding along the 'worker' axis.
+
+        This keeps the codec internals out of the SPMD partitioner — which
+        XLA:CPU miscompiles for the pad/reshape/slice patterns inside the
+        kernels (same bug family as the RoPE note in dist.sharding) — and
+        is the production TPU layout anyway: local data, local kernel."""
+        wspec = P("worker") if self.dcfg.num_workers > 1 else P(None)
+        bspec = P(*wspec, ("fsdp", "model"))
+        rspec = bspec if radius.ndim == 2 else wspec
+
+        def body(th, h, uu, rr, bb):
+            q, hh = self._qdq_row(th[0], h[0], uu[0], rr[0], bb[0])
+            return q[None], hh[None]
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(bspec, bspec, bspec, rspec, wspec),
+            out_specs=(bspec, bspec), check_rep=False)(
+                theta_f, hat_f, u, radius, bits)
+
+    def _quantize_all(self, theta, hat, bits_prev, radius_prev, key,
+                      sharded: bool):
+        """Quantize every worker row on the flat wire buffer.
+
+        Returns (q_wire (W, D_pad) uint8, hat_new pytree, r_new, b_new)
+        with r_new (W,) in global mode / (W, L) per_tensor.  Bit adaptation
+        (paper eq. 11) always tracks the global radius ratio.
+
+        Shared uniform-draw convention: ONE jax.random.uniform draw over the
+        padded (W, D_pad) buffer, consumed identically by every wire_impl —
+        the jnp and Pallas paths are bit-identical.
         """
         qcfg = self.dcfg.gadmm.qcfg
         w = self.dcfg.num_workers
         leaves = jax.tree.leaves(theta)
         treedef = jax.tree.structure(theta)
         hat_leaves = treedef.flatten_up_to(hat)
-        per_leaf_r = jnp.stack([
-            jax.vmap(lambda x, h: jnp.max(jnp.abs(
-                x.astype(jnp.float32) - h.astype(jnp.float32))))(x, h)
-            for x, h in zip(leaves, hat_leaves)], axis=1)  # (W, L)
-        r_global = jnp.max(per_leaf_r, axis=1)             # (W,)
+        sizes = _leaf_sizes(leaves)
+        per_leaf_r = self._per_leaf_radius(leaves, hat_leaves)  # (W, L)
+        r_global = (jnp.max(per_leaf_r, axis=1) if per_leaf_r.shape[1]
+                    else jnp.zeros((w,), jnp.float32))
         if qcfg.adapt_bits:
             r_prev = (radius_prev if radius_prev.ndim == 1
                       else jnp.max(radius_prev, axis=1))
@@ -315,29 +481,60 @@ class QGADMMTrainer:
         else:
             b_new = jnp.full((w,), qcfg.bits, jnp.int32)
         r_new = r_global if self.dcfg.radius_mode == "global" else per_leaf_r
-        keys = jax.random.split(key, max(len(leaves), 1))
-        qs, hats = [], []
-        for i, (x, h) in enumerate(zip(leaves, hat_leaves)):
-            r_i = r_global if r_new.ndim == 1 else r_new[:, i]
-            q, hh = jax.vmap(
-                lambda xx, hh_, kk, rr, bb: quantize_tensor(
-                    xx, hh_, kk, radius=rr, bits=bb)
-            )(x, h, jax.random.split(keys[i], w), r_i, b_new)
-            qs.append(q)
-            hats.append(hh)
-        return (qs, jax.tree.unflatten(treedef, hats), r_new, b_new)
 
-    def _dequantize_all(self, q_leaves, hat_copy, radius, bits):
-        """Receiver-side reconstruction against the stored neighbor hats."""
+        d = sum(sizes)
+        if d == 0:
+            return (jnp.zeros((w, 0), jnp.uint8),
+                    jax.tree.unflatten(treedef, list(hat_leaves)),
+                    r_new, b_new)
+        theta_f = self._pad_wire(self._flatten_rows(leaves, jnp.float32))
+        hat_f = self._pad_wire(self._flatten_rows(hat_leaves, jnp.float32))
+        d_pad = theta_f.shape[1]
+        u = jax.random.uniform(key, (w, d_pad), jnp.float32)
+        if self.dcfg.radius_mode == "per_tensor":
+            # segment-scalar pass: per-leaf scalars -> per-position values;
+            # padding positions get R = 0 (codec leaves them untouched)
+            seg = np.repeat(np.arange(len(sizes)), sizes)      # (D,)
+            r_pos = self._pad_wire(per_leaf_r[:, seg])         # (W, D_pad)
+            r_arg = r_pos
+        else:
+            r_arg = r_global
+        if sharded:
+            q_wire, hat_new_f = self._qdq_sharded(
+                theta_f, hat_f, u, r_arg, b_new)
+        else:
+            q_rows, hat_rows = [], []
+            for i in range(w):
+                q_i, h_i = self._qdq_row(theta_f[i], hat_f[i], u[i],
+                                         r_arg[i], b_new[i])
+                q_rows.append(q_i)
+                hat_rows.append(h_i)
+            q_wire = jnp.stack(q_rows)                 # (W, D_pad) uint8
+            hat_new_f = jnp.stack(hat_rows)            # (W, D_pad) f32
+        hat_new = self._unflatten_cast(hat_new_f, hat_leaves, treedef)
+        return q_wire, hat_new, r_new, b_new
+
+    def _dequantize_all(self, q_wire, hat_copy, radius, bits):
+        """Receiver-side reconstruction on the flat wire buffer against the
+        stored neighbor hats — identical f32 arithmetic (and per-leaf final
+        cast) to the sender's fused kernel, preserving bit-sync."""
         treedef = jax.tree.structure(hat_copy)
         hat_leaves = treedef.flatten_up_to(hat_copy)
-        outs = []
-        for i, (q, h) in enumerate(zip(q_leaves, hat_leaves)):
-            r_i = radius if radius.ndim == 1 else radius[:, i]
-            outs.append(jax.vmap(
-                lambda qq, hh, rr, bb: dequantize_tensor(
-                    qq, hh, radius=rr, bits=bb))(q, h, r_i, bits))
-        return jax.tree.unflatten(treedef, outs)
+        hat_f = self._flatten_rows(hat_leaves, jnp.float32)    # (W, D)
+        if hat_f.shape[1] == 0:
+            return hat_copy
+        levels = (2.0 ** bits.astype(jnp.float32)) - 1.0       # (W,)
+        if radius.ndim == 1:
+            r_pos = radius[:, None]
+        else:
+            sizes = _leaf_sizes(hat_leaves)
+            seg = np.repeat(np.arange(len(sizes)), sizes)
+            r_pos = radius[:, seg]
+        safe_r = jnp.maximum(r_pos, 1e-30)
+        step = 2.0 * safe_r / levels[:, None]
+        out = hat_f + step * q_wire.astype(jnp.float32) - r_pos
+        out = jnp.where(r_pos > 0, out, hat_f)
+        return self._unflatten_cast(out, hat_leaves, treedef)
 
     # ------------------------------------------------------------- step ----
     def _data_loss(self, theta_w, batch_w):
@@ -419,7 +616,9 @@ class QGADMMTrainer:
         all_on = jnp.ones((w,), bool)
         exchange = self._make_exchange(sharded) if w > 1 else None
 
-        def phase(st, batch, active, key):
+        def phase_compute(st, batch, active, key):
+            """Local Adam + quantize for the active workers; returns the
+            updated state and the wire payload (exchange NOT yet applied)."""
             (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
              mu, nu, t) = st
             new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
@@ -431,53 +630,66 @@ class QGADMMTrainer:
             t = jnp.where(active, new_t, t)
 
             if g.quantize:
-                q_leaves, hat_new, r_new, b_new = self._quantize_all(
-                    theta, hat, bits, radius, key)
+                q_wire, hat_new, r_new, b_new = self._quantize_all(
+                    theta, hat, bits, radius, key, sharded)
                 hat = _twhere(active, hat_new, hat)
                 radius = jnp.where(_bmask(active, r_new), r_new, radius)
                 bits = jnp.where(active, b_new, bits)
-                payload = {"wire": self._flatten_wire(q_leaves, jnp.uint8),
+                payload = {"wire": self._finish_wire(q_wire),
                            "radius": r_new, "bits": b_new}
             else:
                 # full-precision GADMM: track the would-be radius for metrics,
                 # then "transmit" theta itself (hat == theta).
-                per_leaf_r = jnp.stack([
-                    jax.vmap(lambda x, h: jnp.max(jnp.abs(
-                        x.astype(jnp.float32) - h.astype(jnp.float32))))(x, h)
-                    for x, h in zip(jax.tree.leaves(theta),
-                                    jax.tree.leaves(hat))], axis=1)  # (W, L)
+                per_leaf_r = self._per_leaf_radius(
+                    jax.tree.leaves(theta), jax.tree.leaves(hat))  # (W, L)
                 hat = _twhere(active, theta, hat)
-                r_new = (per_leaf_r.max(1) if radius.ndim == 1 else per_leaf_r)
+                r_new = (jnp.max(per_leaf_r, axis=1)
+                         if radius.ndim == 1 and per_leaf_r.shape[1]
+                         else (per_leaf_r if radius.ndim > 1
+                               else jnp.zeros((w,), jnp.float32)))
                 radius = jnp.where(_bmask(active, r_new), r_new, radius)
                 payload = {"wire": self._flatten_wire(
                     jax.tree.leaves(hat), jnp.float32)}
 
-            if exchange is not None:
-                from_l, from_r = exchange(payload)
-                # active[w-1] / active[w+1]: did my neighbor transmit?
-                sent_l = jnp.concatenate([jnp.zeros((1,), bool), active[:-1]])
-                sent_r = jnp.concatenate([active[1:], jnp.zeros((1,), bool)])
-                templates = jax.tree.leaves(theta)
-                if g.quantize:
-                    ql = self._unflatten_wire(from_l["wire"], templates)
-                    qr = self._unflatten_wire(from_r["wire"], templates)
-                    hat_l = _twhere(sent_l & has_l, self._dequantize_all(
-                        ql, hat_l, from_l["radius"], from_l["bits"]), hat_l)
-                    hat_r = _twhere(sent_r & has_r, self._dequantize_all(
-                        qr, hat_r, from_r["radius"], from_r["bits"]), hat_r)
-                else:
-                    hl_leaves = self._unflatten_wire(from_l["wire"], templates)
-                    hr_leaves = self._unflatten_wire(from_r["wire"], templates)
-                    treedef = jax.tree.structure(theta)
-                    cast = lambda ls, ref: jax.tree.unflatten(
-                        treedef, [l.astype(r.dtype) for l, r in
-                                  zip(ls, jax.tree.leaves(ref))])
-                    hat_l = _twhere(sent_l & has_l, cast(hl_leaves, hat_l),
-                                    hat_l)
-                    hat_r = _twhere(sent_r & has_r, cast(hr_leaves, hat_r),
-                                    hat_r)
             return (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
-                    mu, nu, t), f0
+                    mu, nu, t), payload, f0
+
+        def phase_apply(st, recv, active):
+            """Fold the exchanged payloads into the neighbor-hat copies."""
+            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+             mu, nu, t) = st
+            from_l, from_r = recv
+            # active[w-1] / active[w+1]: did my neighbor transmit?
+            sent_l = jnp.concatenate([jnp.zeros((1,), bool), active[:-1]])
+            sent_r = jnp.concatenate([active[1:], jnp.zeros((1,), bool)])
+            templates = jax.tree.leaves(theta)
+            d = sum(_leaf_sizes(templates))
+            if g.quantize:
+                ql = self._strip_wire(from_l["wire"], d)
+                qr = self._strip_wire(from_r["wire"], d)
+                hat_l = _twhere(sent_l & has_l, self._dequantize_all(
+                    ql, hat_l, from_l["radius"], from_l["bits"]), hat_l)
+                hat_r = _twhere(sent_r & has_r, self._dequantize_all(
+                    qr, hat_r, from_r["radius"], from_r["bits"]), hat_r)
+            else:
+                hl_leaves = self._unflatten_wire(from_l["wire"], templates)
+                hr_leaves = self._unflatten_wire(from_r["wire"], templates)
+                treedef = jax.tree.structure(theta)
+                cast = lambda ls, ref: jax.tree.unflatten(
+                    treedef, [l.astype(r.dtype) for l, r in
+                              zip(ls, jax.tree.leaves(ref))])
+                hat_l = _twhere(sent_l & has_l, cast(hl_leaves, hat_l),
+                                hat_l)
+                hat_r = _twhere(sent_r & has_r, cast(hr_leaves, hat_r),
+                                hat_r)
+            return (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+                    mu, nu, t)
+
+        def phase(st, batch, active, key):
+            st, payload, f0 = phase_compute(st, batch, active, key)
+            if exchange is not None:
+                st = phase_apply(st, exchange(payload), active)
+            return st, f0
 
         def step(state: DistState, batch):
             key, k1, k2 = jax.random.split(state.key, 3)
@@ -485,7 +697,19 @@ class QGADMMTrainer:
                   state.hat_right, state.lam_left, state.lam_right,
                   state.radius, state.bits, state.opt_mu, state.opt_nu,
                   state.opt_t)
-            if dcfg.mode == "gauss-seidel" and w > 1:
+            if dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
+                # double-buffered exchange: put the heads' payload on the
+                # wire, run the tails' local iterations against the PREVIOUS
+                # neighbor hats while it is in flight, then fold both
+                # exchanges in.  XLA sees no data dependence between the
+                # heads' ppermute and the tails' compute, so the chain
+                # latency hides behind the Adam iterations.
+                st, pl_h, f0 = phase_compute(st, batch, is_head, k1)
+                recv_h = exchange(pl_h)
+                st, pl_t, _ = phase_compute(st, batch, ~is_head, k2)
+                st = phase_apply(st, recv_h, is_head)
+                st = phase_apply(st, exchange(pl_t), ~is_head)
+            elif dcfg.mode == "gauss-seidel" and w > 1:
                 st, f0 = phase(st, batch, is_head, k1)
                 st, _ = phase(st, batch, ~is_head, k2)
             else:
@@ -524,14 +748,43 @@ class QGADMMTrainer:
 
         return step
 
+    # ------------------------------------------------------- accounting ----
+    def wire_row_bytes(self, d: int) -> int:
+        """Actual bytes of one worker's exchanged wire-buffer row for d
+        parameters — exactly what the ppermute moves: the row is zero-padded
+        to the device-group multiple, and with pack_wire each of the group's
+        devices nibble-packs its own D_pad/G shard (packed_len per shard, so
+        the pack4 256-level granularity is paid per device)."""
+        g = self._group_size()
+        d_pad = sh.pad_to_multiple(d, g)
+        if self.dcfg.gadmm.quantize:
+            if self.dcfg.pack_wire:
+                return g * packed_len(d_pad // g)
+            return d_pad
+        return 4 * d_pad
+
     def wire_bits_per_round(self, theta) -> int:
-        """Chain traffic per iteration under the unified payload accounting
-        (repro.core.quantizer.payload_bits / gadmm.bits_per_round).
-        per_tensor radius mode transmits one extra f32 R per tensor beyond
-        the single global R that bits_per_round already bills."""
+        """Chain traffic per train step, matching the bytes on the wire.
+
+        Bills what the ppermute exchanges actually move: per phase (2 in
+        gauss-seidel, 1 in jacobi / overlap still performs both phases'
+        exchanges) and per direction, each of the W-1 chain links carries one
+        wire-buffer row (wire_row_bytes: packing + group padding included)
+        plus the quantizer sideband (R: one f32 in global mode, one per
+        tensor in per_tensor mode; b: one i32).  tests cross-check this
+        against the constructed payload buffers and core.comm_model."""
+        w = self.dcfg.num_workers
+        if w <= 1:
+            return 0
         leaves = jax.tree.leaves(theta)
-        d = sum(int(np.prod(l.shape[1:])) for l in leaves)
-        total = bits_per_round(self.dcfg.gadmm, self.dcfg.num_workers, d)
-        if self.dcfg.gadmm.quantize and self.dcfg.radius_mode == "per_tensor":
-            total += self.dcfg.num_workers * 32 * (len(leaves) - 1)
-        return total
+        d = sum(_leaf_sizes(leaves))
+        row_bits = 8 * self.wire_row_bytes(d)
+        if self.dcfg.gadmm.quantize:
+            n_r = (len(leaves) if self.dcfg.radius_mode == "per_tensor"
+                   else 1)
+            sideband = 32 * n_r + 32  # radius f32(s) + bits i32
+        else:
+            sideband = 0
+        links = w - 1
+        n_phases = 2 if self.dcfg.mode == "gauss-seidel" else 1
+        return n_phases * 2 * links * (row_bits + sideband)

@@ -5,8 +5,11 @@ import jax
 
 from . import pack as _kernel
 from . import ref as _ref
+from .ref import packed_len
 
 Array = jax.Array
+
+__all__ = ["pack4", "unpack4", "packed_len"]
 
 
 def pack4(q: Array, *, impl: str = "pallas") -> Array:

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import LANES, _pad_rows
+from .ref import LANES, _pad_rows, take_levels
 
 Array = jax.Array
 
@@ -69,4 +69,6 @@ def unpack4(packed: Array, n: int, *, interpret: bool = True) -> Array:
         out_shape=jax.ShapeDtypeStruct((rows, 2, LANES), jnp.uint8),
         interpret=interpret,
     )(p2)
-    return out.reshape(-1)[:n]
+    # take_levels, not out.reshape(-1)[:n]: XLA:CPU miscompiles the fused
+    # stack -> reshape -> odd-slice pattern for some n (see ref.take_levels).
+    return take_levels(out[:, 0, :], out[:, 1, :], n)

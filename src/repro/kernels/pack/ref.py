@@ -20,6 +20,16 @@ def _pad_rows(n: int) -> int:
     return -(-n // (2 * LANES))
 
 
+def packed_len(n: int) -> int:
+    """Bytes on the wire for n packed levels: 128 * ceil(n / 256).
+
+    Single source of truth for the pack4 wire length — the sender
+    (pack4 / pack4_ref) and every receiver (unpack4, the dist trainer's
+    wire slicing, traffic accounting) must agree on it.
+    """
+    return LANES * _pad_rows(n)
+
+
 def pack4_ref(q: Array) -> Array:
     """Pack flat uint8 values (< 16) into the strided nibble wire format."""
     flat = q.reshape(-1)
@@ -31,11 +41,34 @@ def pack4_ref(q: Array) -> Array:
     return (q3[:, 0, :] | (q3[:, 1, :] << 4)).astype(jnp.uint8).reshape(-1)
 
 
+def take_levels(lo: Array, hi: Array, n: int) -> Array:
+    """First n levels, in wire order, from (rows, 128) lo/hi nibble planes.
+
+    Equivalent to jnp.stack([lo, hi], axis=1).reshape(-1)[:n], but slices the
+    planes BEFORE interleaving: XLA:CPU miscompiles the fused
+    stack -> reshape -> odd-length-slice pattern for some n (observed at
+    n = 129: the lone element taken from the hi plane comes back as garbage
+    under jit).  Shared by unpack4_ref and the Pallas unpack4 wrapper so both
+    sides of the wire use the safe formulation.
+    """
+    full = n // (2 * LANES)
+    tail = n - full * 2 * LANES
+    parts = []
+    if full:
+        parts.append(jnp.stack([lo[:full], hi[:full]], axis=1).reshape(-1))
+    if tail:
+        parts.append(lo[full, :min(tail, LANES)])
+        if tail > LANES:
+            parts.append(hi[full, :tail - LANES])
+    if not parts:
+        return jnp.zeros((0,), jnp.uint8)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
 def unpack4_ref(packed: Array, n: int) -> Array:
     """Inverse of pack4_ref, returning the first n levels."""
     rows = _pad_rows(n)
     p2 = packed.reshape(rows, LANES)
     lo = (p2 & 0xF).astype(jnp.uint8)
     hi = (p2 >> 4).astype(jnp.uint8)
-    out = jnp.stack([lo, hi], axis=1)  # (rows, 2, 128)
-    return out.reshape(-1)[:n]
+    return take_levels(lo, hi, n)

@@ -26,6 +26,7 @@ def quantize_dequantize(
     """Stochastically quantize (theta - theta_hat_prev); return (q uint8, new hat).
 
     impl: 'pallas' (interpret on CPU), 'pallas_compiled' (TPU), or 'ref'.
+    radius: scalar, or theta-shaped for per-element quantization ranges.
     """
     u = jax.random.uniform(key, theta.shape, jnp.float32)
     levels = (2.0 ** jnp.asarray(bits, jnp.float32)) - 1.0

@@ -25,9 +25,11 @@ BLOCK_M = 256  # sublane-dim block; lane dim fixed at 128
 LANES = 128
 
 
-def _kernel(r_ref, lv_ref, theta_ref, hat_ref, u_ref, q_ref, newhat_ref):
-    radius = r_ref[0, 0]
-    levels = lv_ref[0, 0]
+def _qdq_math(radius, levels, theta_ref, hat_ref, u_ref, q_ref, newhat_ref):
+    """Shared kernel body: the scalar-radius and tile-radius variants must
+    stay bit-identical (the trainer's cross-impl parity contract), so the
+    arithmetic lives in exactly one place.  radius is a scalar or a tile
+    broadcastable against the block."""
     x = theta_ref[...].astype(jnp.float32)
     h = hat_ref[...].astype(jnp.float32)
     u = u_ref[...]
@@ -44,6 +46,21 @@ def _kernel(r_ref, lv_ref, theta_ref, hat_ref, u_ref, q_ref, newhat_ref):
     newhat_ref[...] = jnp.where(active, hat, h).astype(newhat_ref.dtype)
 
 
+def _kernel(r_ref, lv_ref, theta_ref, hat_ref, u_ref, q_ref, newhat_ref):
+    _qdq_math(r_ref[0, 0], lv_ref[0, 0], theta_ref, hat_ref, u_ref, q_ref,
+              newhat_ref)
+
+
+def _kernel_vec_r(lv_ref, theta_ref, hat_ref, u_ref, r_ref, q_ref, newhat_ref):
+    """Per-element radius variant: R rides in a VMEM tile instead of SMEM.
+
+    Used by the dist trainer's per_tensor radius mode, where the per-tensor
+    scalars are expanded (segment-scalar gather) into one radius value per
+    wire-buffer position."""
+    _qdq_math(r_ref[...], lv_ref[0, 0], theta_ref, hat_ref, u_ref, q_ref,
+              newhat_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_dequantize(
     theta: Array,
@@ -56,8 +73,11 @@ def quantize_dequantize(
 ) -> tuple[Array, Array]:
     """Fused stochastic quantize-dequantize over an arbitrary-shape tensor.
 
-    See ref.quantize_dequantize_ref for semantics.  interpret=True executes the
-    kernel body in Python on CPU (this container); on TPU pass interpret=False.
+    See ref.quantize_dequantize_ref for semantics.  `radius` is a scalar
+    (one R for the whole tensor, SMEM path) or an array of theta's shape
+    (per-element R, VMEM tile path — the dist trainer's per_tensor mode).
+    interpret=True executes the kernel body in Python on CPU (this
+    container); on TPU pass interpret=False.
     """
     orig_shape = theta.shape
     n = theta.size
@@ -77,23 +97,56 @@ def quantize_dequantize(
 
     block_m = min(BLOCK_M, rows)
     grid = (-(-rows // block_m),)
-    r2 = radius.astype(jnp.float32).reshape(1, 1)
     lv2 = levels.astype(jnp.float32).reshape(1, 1)
 
     scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     tile = pl.BlockSpec((block_m, cols), lambda i: (i, 0))
-    q2, newhat2 = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[scalar_spec, scalar_spec, tile, tile, tile],
-        out_specs=[tile, tile],
-        out_shape=[
-            jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
-            jax.ShapeDtypeStruct((rows, cols), theta_hat_prev.dtype),
-        ],
-        interpret=interpret,
-    )(r2, lv2, theta2, hat2, u2)
+    out_shape = [
+        jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
+        jax.ShapeDtypeStruct((rows, cols), theta_hat_prev.dtype),
+    ]
+    if radius.ndim == 0:
+        r2 = radius.astype(jnp.float32).reshape(1, 1)
+        q2, newhat2 = pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[scalar_spec, scalar_spec, tile, tile, tile],
+            out_specs=[tile, tile],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(r2, lv2, theta2, hat2, u2)
+    else:
+        # R == 0 on padding: inactive lanes write q = 0, discarded below.
+        r2 = to2d(radius.astype(jnp.float32), 0.0)
+        q2, newhat2 = pl.pallas_call(
+            _kernel_vec_r,
+            grid=grid,
+            in_specs=[scalar_spec, tile, tile, tile, tile],
+            out_specs=[tile, tile],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(lv2, theta2, hat2, u2, r2)
 
-    q = q2.reshape(-1)[:n].reshape(orig_shape)
-    newhat = newhat2.reshape(-1)[:n].reshape(orig_shape)
+    q = _take_flat(q2, n).reshape(orig_shape)
+    newhat = _take_flat(newhat2, n).reshape(orig_shape)
     return q, newhat
+
+
+def _take_flat(x2: Array, n: int) -> Array:
+    """First n elements of a (rows, cols) buffer in row-major order.
+
+    Equivalent to x2.reshape(-1)[:n], but slices the row/tail parts before
+    flattening: XLA:CPU miscompiles the fused reshape -> odd-length-slice
+    pattern for some n under SPMD partitioning (same bug family as
+    kernels/pack ref.take_levels)."""
+    rows, cols = x2.shape
+    full = n // cols
+    tail = n - full * cols
+    parts = []
+    if full:
+        parts.append(x2[:full].reshape(-1))
+    if tail:
+        parts.append(x2[full, :tail])
+    if not parts:
+        return jnp.zeros((0,), x2.dtype)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)

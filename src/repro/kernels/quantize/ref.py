@@ -19,8 +19,10 @@ def quantize_dequantize_ref(
     Args:
       theta, theta_hat_prev: same-shape float tensors.
       u: uniform [0,1) random values, same shape (rounding randomness).
-      radius: scalar f32, R = ||theta - theta_hat_prev||_inf (precomputed; in
-        the distributed setting it is an all-reduce-max over the worker group).
+      radius: f32, R = ||theta - theta_hat_prev||_inf (precomputed; in the
+        distributed setting it is an all-reduce-max over the worker group).
+        A scalar, or any shape broadcastable against theta (per-element R,
+        used by the dist trainer's per_tensor radius mode).
       levels: scalar f32, 2^b - 1.
 
     Returns:

@@ -120,14 +120,15 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                  quantize: bool = True, local_iters: int = 1,
                  microbatches: int = 1, verbose: bool = True,
                  xent: str = "gather", attn_remat: bool = False,
-                 uneven: bool = False, pack: bool = False, bits: int = 8,
-                 seq_shard: bool = False):
+                 uneven: bool = False, pack: bool | None = None,
+                 bits: int = 8, seq_shard: bool = False,
+                 wire_impl: str = "jnp", reduced: bool = False):
     cfg = registry.get_config(
-        arch, compute_dtype=jnp.bfloat16, param_dtype=jnp.float32,
-        xent_mode=xent, attn_scan_remat=attn_remat,
+        arch, smoke=reduced, compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.float32, xent_mode=xent, attn_scan_remat=attn_remat,
         head_pad=16 if uneven else 0)
     model = registry.get_model(cfg)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, reduced=reduced)
     total_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     w = workers or pick_workers(arch, total_data)
     if multi_pod and w < mesh.shape["pod"]:
@@ -139,7 +140,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                           qcfg=QuantizerConfig(bits=bits), alpha=0.01),
         local_iters=local_iters, microbatches=microbatches, mode=mode,
         state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
-        seq_shard=seq_shard)
+        seq_shard=seq_shard, wire_impl=wire_impl)
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
     state_structs = jax.eval_shape(
         functools.partial(init_state,
@@ -155,17 +156,21 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0
     return _report(compiled, wmesh, cfg, shape_name, arch,
                    dict(mode=mode, workers=w, quantize=quantize,
-                        t_lower=t_lower, t_compile=t_compile),
+                        t_lower=t_lower, t_compile=t_compile,
+                        reduced=reduced, wire_impl=wire_impl),
                    verbose=verbose)
 
 
 def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool,
-                 verbose: bool = True, windowed_cache: bool = False):
+                 verbose: bool = True, windowed_cache: bool = False,
+                 reduced: bool = False):
     cfg = registry.get_config(
-        arch, compute_dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+        arch, smoke=reduced, compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16)
     model = registry.get_model(cfg)
     sh = SHAPES[shape_name]
-    mesh = serve_view(make_production_mesh(multi_pod=multi_pod))
+    mesh = serve_view(make_production_mesh(multi_pod=multi_pod,
+                                           reduced=reduced))
     server = Server(model=model, cfg=cfg, mesh=mesh, batch_size=sh["batch"])
     params = jax.eval_shape(lambda k: model.init(k, cfg),
                             jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -198,7 +203,8 @@ def dryrun_serve(arch: str, shape_name: str, *, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     return _report(compiled, mesh, cfg, shape_name, arch,
-                   dict(t_lower=t_lower, t_compile=t_compile),
+                   dict(t_lower=t_lower, t_compile=t_compile,
+                        reduced=reduced),
                    verbose=verbose)
 
 
@@ -285,10 +291,20 @@ def main(argv=None):
     ap.add_argument("--uneven", action="store_true", default=True,
                     help="pad non-divisible MHA head counts (exact; masked)")
     ap.add_argument("--no-uneven", dest="uneven", action="store_false")
-    ap.add_argument("--pack", action="store_true")
+    ap.add_argument("--pack", action="store_true", default=None,
+                    help="force int4 wire packing on (--no-pack forces off; "
+                         "default None = DistConfig auto: packed iff "
+                         "effective bits <= 4)")
+    ap.add_argument("--no-pack", dest="pack", action="store_false")
     ap.add_argument("--seq-shard", action="store_true",
                     help="sequence-parallel residual stream (train)")
     ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--wire-impl", default="jnp",
+                    choices=["jnp", "pallas", "pallas_compiled"],
+                    help="fused wire-path codec (dist.qgadmm wire_impl)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke configs on 16-device meshes: records the "
+                         "full 33-pair matrix on CPU (committed artifacts)")
     ap.add_argument("--windowed-cache", action="store_true", default=True)
     ap.add_argument("--no-windowed-cache", dest="windowed_cache",
                     action="store_false")
@@ -299,6 +315,10 @@ def main(argv=None):
     if args.paper_baseline:
         args.xent, args.attn_remat, args.uneven = "gather", False, False
         args.windowed_cache = False
+    if args.reduced:
+        # smoke dims (e.g. the tiny vocab) are not GSPMD-pad-shardable, so
+        # the uneven-head toggle is meaningless at smoke scale
+        args.uneven = False
 
     results = []
     pairs = (list(iter_pairs()) if args.all
@@ -314,10 +334,13 @@ def main(argv=None):
                                  microbatches=args.microbatches,
                                  xent=args.xent, attn_remat=args.attn_remat,
                                  uneven=args.uneven, pack=args.pack,
-                                 bits=args.bits, seq_shard=args.seq_shard)
+                                 bits=args.bits, seq_shard=args.seq_shard,
+                                 wire_impl=args.wire_impl,
+                                 reduced=args.reduced)
             else:
                 r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
-                                 windowed_cache=args.windowed_cache)
+                                 windowed_cache=args.windowed_cache,
+                                 reduced=args.reduced)
             results.append(r)
         except Exception as e:
             print(f"== {arch} x {shape} FAILED: {type(e).__name__}: {e}",

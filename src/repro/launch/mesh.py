@@ -13,8 +13,13 @@ import jax
 from jax.sharding import Mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, reduced: bool = False):
+    """Canonical 256/512-chip meshes; reduced=True gives the same topology at
+    16-device scale (CPU-recordable dry-run sweeps, see launch.dryrun)."""
+    if reduced:
+        shape = (2, 4, 2) if multi_pod else (8, 2)
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

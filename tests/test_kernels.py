@@ -94,6 +94,52 @@ def test_pack_roundtrip_and_ref(n):
     assert pk.size <= n // 2 + 256  # ~2x compression (+ row padding)
 
 
+@pytest.mark.parametrize("n", [1, 3, 127, 129, 250, 257, 300, 511, 1000,
+                               4097, 70001])
+def test_packed_len_is_the_wire_length_contract(n):
+    """packed_len(n) (exported by kernels/pack) IS the wire length both the
+    packer and every unpacker must agree on, including every odd size with
+    n % 256 != 0 — regression: the dist trainer used to hardcode the
+    128 * ceil(n/256) formula."""
+    from repro.kernels.pack.ref import LANES, _pad_rows
+
+    assert pack_ops.packed_len(n) == 128 * (-(-n // 256)) == LANES * _pad_rows(n)
+    q = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, 16).astype(jnp.uint8)
+    for impl in ("ref", "pallas"):
+        pk = pack_ops.pack4(q, impl=impl)
+        assert pk.size == pack_ops.packed_len(n), (impl, n)
+        un = pack_ops.unpack4(pk[: pack_ops.packed_len(n)], n, impl=impl)
+        np.testing.assert_array_equal(np.asarray(un), np.asarray(q))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_vector_radius_matches_ref(dtype):
+    """Per-element radius (the trainer's per_tensor segment-scalar expansion)
+    agrees between the Pallas tile-radius kernel and the broadcasting ref."""
+    key = jax.random.PRNGKey(11)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n = 700  # odd size: exercises radius padding in the tile path
+    theta = jax.random.normal(k1, (n,)).astype(dtype)
+    hat = (0.5 * jax.random.normal(k2, (n,))).astype(dtype)
+    # two "tensors" of 300 + 400 elements with their own radii; one zero
+    diff = jnp.abs(theta.astype(jnp.float32) - hat.astype(jnp.float32))
+    r_a = jnp.max(diff[:300])
+    radius = jnp.concatenate([jnp.full((300,), r_a),
+                              jnp.zeros((400,), jnp.float32)])
+    u = jax.random.uniform(k3, (n,), jnp.float32)
+    levels = jnp.asarray(15.0)
+    q_r, hat_r = q_ref.quantize_dequantize_ref(theta, hat, u, radius, levels)
+    q_p, hat_p = q_kernel.quantize_dequantize(theta, hat, u, radius, levels,
+                                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_r), np.asarray(q_p))
+    np.testing.assert_array_equal(np.asarray(hat_r, np.float32),
+                                  np.asarray(hat_p, np.float32))
+    # zero-radius segment: untouched hat, all-zero levels
+    np.testing.assert_array_equal(np.asarray(q_p[300:]), 0)
+    np.testing.assert_array_equal(np.asarray(hat_p[300:]),
+                                  np.asarray(hat[300:]))
+
+
 def test_kernel_block_shape_alignment():
     """Kernel tiles are (m,128) lane-aligned for every input size."""
     for n in (1, 127, 128, 129, 12345):

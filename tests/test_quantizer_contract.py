@@ -86,6 +86,26 @@ def test_payload_accounting_unified():
         assert Q.payload_bits(qcfg, d) == 4 * d + Q.header_bits(adapt)
 
 
+def test_gadmm_adaptive_bits_single_source_of_truth():
+    """gadmm._quantize_rows must apply exactly quantizer._next_bits (eq. 11)
+    — regression: the bit-growth rule used to be reimplemented inline."""
+    n, d = 5, 16
+    qcfg = Q.QuantizerConfig(bits=3, adapt_bits=True, max_bits=8)
+    cfg = gadmm.GADMMConfig(quantize=True, qcfg=qcfg)
+    key = jax.random.PRNGKey(9)
+    theta = jax.random.normal(key, (n, d))
+    hat_prev = jnp.zeros((n, d))
+    r_new = jnp.max(jnp.abs(theta - hat_prev), axis=1)
+    # r_prev mixes growth, shrinkage, and the r_prev == 0 first-iteration case
+    r_prev = jnp.asarray([0.0, 0.1, 1.0, 5.0, 100.0])
+    bits_prev = jnp.asarray([3, 2, 4, 6, 8], jnp.int32)
+    active = jnp.ones((n,), bool)
+    _, _, b_rows = gadmm._quantize_rows(
+        theta, hat_prev, active, jax.random.PRNGKey(0), r_prev, bits_prev, cfg)
+    b_rule = Q._next_bits(qcfg, bits_prev, r_new, r_prev)
+    np.testing.assert_array_equal(np.asarray(b_rows), np.asarray(b_rule))
+
+
 def test_topk_selection_is_exact_under_ties():
     """_quantize_rows transmits exactly k coordinates even when |delta| ties
     would admit more (bits_per_round bills exactly k)."""

@@ -1,0 +1,297 @@
+"""Fused wire-path contracts of the distributed trainer.
+
+Trainer-level parity (wire_impl='jnp' vs 'pallas' bit-identical through a
+whole train step), the zero-size-leaf regression, and the wire-accounting ==
+bytes-on-the-wire invariant (cross-checked against core.comm_model).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import comm_model as cm
+from repro.core.gadmm import GADMMConfig
+from repro.core.quantizer import QuantizerConfig
+from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+from repro.kernels.pack.ref import packed_len
+
+
+class MixedModel:
+    """Tiny module with a mixed-precision pytree: f32 and bf16 leaves plus a
+    zero-size (0,) leaf (regression: _quantize_all used to crash on it)."""
+
+    @staticmethod
+    def init(key, cfg):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wa": jax.random.normal(k1, (6, 4), jnp.float32),
+            "wb": (0.1 * jax.random.normal(k2, (4, 3))).astype(jnp.bfloat16),
+            "bias": jax.random.normal(k3, (3,), jnp.float32),
+            "empty": jnp.zeros((0,), jnp.float32),
+        }
+
+    @staticmethod
+    def loss_fn(params, batch, cfg):
+        h = batch["x"] @ params["wa"]
+        h = h @ params["wb"].astype(jnp.float32) + params["bias"]
+        return jnp.mean((h.sum(-1) - batch["y"]) ** 2)
+
+
+def _setup(w=4, **dcfg_kw):
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("worker", "fsdp", "model"))
+    kw = dict(num_workers=w,
+              gadmm=GADMMConfig(rho=0.5, quantize=True,
+                                qcfg=QuantizerConfig(bits=4), alpha=0.01),
+              local_iters=2, local_lr=1e-2)
+    kw.update(dcfg_kw)
+    dcfg = DistConfig(**kw)
+    tr = QGADMMTrainer(MixedModel, None, dcfg, mesh)
+    state = init_state(lambda k: MixedModel.init(k, None),
+                       jax.random.PRNGKey(0), dcfg)
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (w, 8, 6)),
+             "y": jax.random.normal(jax.random.PRNGKey(2), (w, 8))}
+    return tr, state, batch
+
+
+def _run(tr, state, batch, steps=3):
+    step = jax.jit(tr.make_train_step())
+    for _ in range(steps):
+        state, metrics = step(state, batch)
+    return state, metrics
+
+
+@pytest.mark.parametrize("radius_mode", ["global", "per_tensor"])
+@pytest.mark.parametrize("pack_wire", [False, True])
+def test_trainer_parity_jnp_vs_pallas(radius_mode, pack_wire):
+    """A train step with wire_impl='pallas' is bit-identical to 'jnp' on a
+    mixed-precision pytree (bf16/f32 leaves), in both radius modes, with and
+    without nibble packing — the shared uniform-draw convention at work."""
+    tr_j, st_j, batch = _setup(radius_mode=radius_mode, pack_wire=pack_wire,
+                               wire_impl="jnp")
+    tr_p, st_p, _ = _setup(radius_mode=radius_mode, pack_wire=pack_wire,
+                           wire_impl="pallas")
+    st_j, m_j = _run(tr_j, st_j, batch)
+    st_p, m_p = _run(tr_p, st_p, batch)
+    for field in st_j._fields:
+        la = jax.tree.leaves(getattr(st_j, field))
+        lb = jax.tree.leaves(getattr(st_p, field))
+        for a, b in zip(la, lb):
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8) if a.dtype == jnp.bfloat16
+                else np.asarray(a),
+                np.asarray(b).view(np.uint8) if b.dtype == jnp.bfloat16
+                else np.asarray(b),
+                err_msg=f"state field {field} diverged")
+    np.testing.assert_array_equal(np.asarray(m_j["loss"]),
+                                  np.asarray(m_p["loss"]))
+
+
+def test_jit_train_step_parity_jnp_vs_pallas_sharded():
+    """Acceptance: one sharded jit_train_step with wire_impl='pallas' is
+    bit-identical to 'jnp' on a mixed-precision pytree, in both radius modes,
+    with and without pack_wire (per-shard nibble packing inside the
+    exchange's shard_map, uint8 ppermute on the wire)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.launch.mesh import factor_mesh
+        from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+        from repro.core.gadmm import GADMMConfig
+        from repro.core.quantizer import QuantizerConfig
+
+        class MixedModel:
+            @staticmethod
+            def init(key, cfg):
+                k1, k2, k3 = jax.random.split(key, 3)
+                return {
+                    "wa": jax.random.normal(k1, (8, 4), jnp.float32),
+                    "wb": (0.1 * jax.random.normal(k2, (4, 6))
+                           ).astype(jnp.bfloat16),
+                    "bias": jax.random.normal(k3, (6,), jnp.float32),
+                    "empty": jnp.zeros((0,), jnp.float32),
+                }
+
+            @staticmethod
+            def loss_fn(params, batch, cfg):
+                h = batch["x"] @ params["wa"]
+                h = h @ params["wb"].astype(jnp.float32) + params["bias"]
+                return jnp.mean((h.sum(-1) - batch["y"]) ** 2)
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ("data", "model"))
+        wmesh = factor_mesh(mesh, num_workers=4)
+        batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8)),
+                 "y": jax.random.normal(jax.random.PRNGKey(2), (4, 8))}
+
+        def run(wire_impl, radius_mode, pack):
+            dcfg = DistConfig(num_workers=4, radius_mode=radius_mode,
+                              gadmm=GADMMConfig(rho=0.5, quantize=True,
+                                                qcfg=QuantizerConfig(bits=4),
+                                                alpha=0.01),
+                              local_iters=2, local_lr=1e-2,
+                              pack_wire=pack, wire_impl=wire_impl)
+            tr = QGADMMTrainer(MixedModel, None, dcfg, wmesh)
+            st = init_state(lambda k: MixedModel.init(k, None),
+                            jax.random.PRNGKey(0), dcfg)
+            st, b = tr.place(st, batch)
+            step = tr.jit_train_step(st, b)
+            for _ in range(2):
+                st, m = step(st, b)
+            return st, m
+
+        for radius_mode in ("global", "per_tensor"):
+            for pack in (False, True):
+                st_j, m_j = run("jnp", radius_mode, pack)
+                st_p, m_p = run("pallas", radius_mode, pack)
+                for field in st_j._fields:
+                    for a, b in zip(jax.tree.leaves(getattr(st_j, field)),
+                                    jax.tree.leaves(getattr(st_p, field))):
+                        a = np.asarray(jnp.asarray(a, jnp.float32))
+                        b = np.asarray(jnp.asarray(b, jnp.float32))
+                        np.testing.assert_array_equal(
+                            a, b, err_msg=f"{radius_mode} pack={pack} "
+                                          f"field {field}")
+                assert float(m_j["loss"]) == float(m_p["loss"])
+                print("OK", radius_mode, pack)
+        print("DONE")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "DONE" in r.stdout
+
+
+def test_zero_size_leaf_regression():
+    """A pytree containing a (0,) leaf must train in both the quantized and
+    the full-precision (metrics-radius) branch of phase()."""
+    for quantize in (True, False):
+        tr, state, batch = _setup(
+            gadmm=GADMMConfig(rho=0.5, quantize=quantize,
+                              qcfg=QuantizerConfig(bits=4), alpha=0.01))
+        state, metrics = _run(tr, state, batch, steps=2)
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["radius_mean"]))
+        assert state.theta["empty"].shape == (4, 0)
+
+
+def test_overlap_double_buffered_exchange_trains():
+    """overlap=True (tails compute against previous hats while the heads'
+    payload is in flight) still decreases the loss."""
+    tr, state, batch = _setup(overlap=True)
+    step = jax.jit(tr.make_train_step())
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("pack_wire,quantize,radius_mode", [
+    (False, True, "global"),
+    (True, True, "global"),
+    (True, True, "per_tensor"),
+    (None, False, "global"),
+])
+def test_wire_accounting_matches_actual_payload(pack_wire, quantize,
+                                                radius_mode):
+    """wire_bits_per_round must equal the bytes the ppermute actually moves:
+    the constructed wire buffer row (packing + group padding included) plus
+    the radius/bits sideband, per link, direction, and phase."""
+    tr, state, batch = _setup(
+        gadmm=GADMMConfig(rho=0.5, quantize=quantize,
+                          qcfg=QuantizerConfig(bits=4), alpha=0.01),
+        pack_wire=pack_wire, radius_mode=radius_mode)
+    leaves = jax.tree.leaves(state.theta)
+    d = sum(int(np.prod(l.shape[1:])) for l in leaves)
+    # actual buffer as the exchange moves it: _finish_wire pads the row,
+    # then (pack_wire) every device nibble-packs its own shard inside the
+    # exchange shard_map
+    g = tr._group_size()
+    if quantize:
+        wire = tr._finish_wire(jnp.zeros((4, d), jnp.uint8))
+        if tr.dcfg.pack_wire:
+            shard = wire[0].reshape(g, -1)[0]
+            from repro.kernels.pack import ops as pack_ops
+            actual_row_bytes = g * pack_ops.pack4(shard, impl="ref").size
+            assert actual_row_bytes >= packed_len(d)  # per-shard granularity
+        else:
+            actual_row_bytes = wire.shape[1] * wire.dtype.itemsize
+    else:
+        wire = tr._flatten_wire(leaves, jnp.float32)
+        actual_row_bytes = wire.shape[1] * wire.dtype.itemsize
+    assert tr.wire_row_bytes(d) == actual_row_bytes
+    n_r = len(leaves) if radius_mode == "per_tensor" else 1
+    sideband = (32 * n_r + 32) if quantize else 0
+    expected = 2 * 2 * (4 - 1) * (8 * actual_row_bytes + sideband)
+    assert tr.wire_bits_per_round(state.theta) == expected
+    # the metric reports the same number
+    _, metrics = _run(tr, state, batch, steps=1)
+    assert int(metrics["wire_bits_per_round"]) == expected
+
+
+def test_wire_accounting_cross_check_comm_model():
+    """The Sec. V-A radio model fed with the REPORTED bits must give the
+    same transmit energy as when fed with an INDEPENDENTLY measured byte
+    count (packing a wire shard by hand), and packing must strictly reduce
+    the energy once the payload dominates the pack granularity."""
+    from repro.kernels.pack import ops as pack_ops
+
+    radio = cm.RadioConfig(n_workers=4)
+    bw = radio.worker_bandwidth(decentralized=True)
+
+    class Big:
+        @staticmethod
+        def init(key, cfg):
+            return {"w": jax.random.normal(key, (64, 64), jnp.float32)}
+
+        loss_fn = None
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("worker", "fsdp", "model"))
+    bits = {}
+    measured_bits = {}
+    for pack in (False, True):
+        dcfg = DistConfig(num_workers=4,
+                          gadmm=GADMMConfig(quantize=True,
+                                            qcfg=QuantizerConfig(bits=4)),
+                          pack_wire=pack)
+        tr = QGADMMTrainer(Big, None, dcfg, mesh)
+        state = init_state(lambda k: Big.init(k, None),
+                           jax.random.PRNGKey(0), dcfg)
+        bits[pack] = tr.wire_bits_per_round(state.theta)
+        # independent measurement: build the padded row, pack a shard the
+        # way the exchange does, count bytes + sideband per link/dir/phase
+        d = 64 * 64
+        row = tr._finish_wire(jnp.zeros((4, d), jnp.uint8))[0]
+        g = tr._group_size()
+        if pack:
+            row_bytes = sum(
+                int(pack_ops.pack4(s, impl="ref").size)
+                for s in row.reshape(g, -1))
+        else:
+            row_bytes = int(row.size) * row.dtype.itemsize
+        sideband = 32 + 32  # R f32 + b i32 (global radius mode)
+        measured_bits[pack] = 2 * 2 * (4 - 1) * (8 * row_bytes + sideband)
+    # 4096 params: packed row = 2048 B << unpacked 4096 B
+    assert bits[True] < bits[False]
+    e_packed = cm.tx_energy(bits[True], 10.0, bw, radio.slot_s,
+                            radio.noise_psd)
+    e_unpacked = cm.tx_energy(bits[False], 10.0, bw, radio.slot_s,
+                              radio.noise_psd)
+    assert 0 < e_packed < e_unpacked
+    # reported bits == independently measured bits -> the radio model sees
+    # the true wire traffic
+    for pack in (False, True):
+        assert bits[pack] == measured_bits[pack], (pack, bits, measured_bits)
+    assert e_packed == cm.tx_energy(measured_bits[True], 10.0, bw,
+                                    radio.slot_s, radio.noise_psd)
