@@ -54,13 +54,12 @@ def energy_curves(placement, radio: cm.RadioConfig, d: int, iters: int,
     """algs: name -> dict(decentralized: bool, bits_per_worker: fn(iter)->bits
     upload, download_bits).  Returns name -> cumulative energy array."""
     out = {}
-    bd = placement.broadcast_dist()
-    chain_order_bd = bd  # indexed by chain position
+    bd = placement.broadcast_dist()  # worker-id order (topology-dispatched)
     for name, a in algs.items():
         per_round = []
         if a["decentralized"]:
             e = cm.round_energy_decentralized(
-                np.full(placement.n, a["upload_bits"]), chain_order_bd, radio)
+                np.full(placement.n, a["upload_bits"]), bd, radio)
         else:
             e = cm.round_energy_ps(a["upload_bits"], placement.ps_dist,
                                    a["download_bits"], radio)

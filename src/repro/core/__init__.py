@@ -1,12 +1,24 @@
-"""Core: the paper's contribution — Q-GADMM / Q-SGADMM and their baselines."""
-from .gadmm import (ChainState, GADMMConfig, Quadratic, bits_per_round,
-                    gadmm_step, init_state, make_quadratic)
+"""Core: the paper's contribution — Q-GADMM / Q-SGADMM and their baselines,
+plus the CQ-GGADMM extensions (generalized bipartite topologies + censored
+transmissions)."""
+from .censor import CensorConfig
+from .gadmm import (ChainState, GADMMConfig, GraphState, Quadratic,
+                    bits_per_round, gadmm_step, graph_bits_per_round,
+                    graph_init_state, graph_step, init_state,
+                    make_graph_quadratic, make_quadratic)
 from .quantizer import (QuantizerConfig, QuantState, dequantize, payload_bits,
                         quantize)
 from .sgadmm import SGADMMConfig, SGADMMTrainer
+from .topology import (Placement, Topology, build_topology, chain_topology,
+                       random_placement, ring_topology, star_topology,
+                       torus2d_topology)
 
 __all__ = [
     "ChainState", "GADMMConfig", "Quadratic", "bits_per_round", "gadmm_step",
     "init_state", "make_quadratic", "QuantizerConfig", "QuantState",
     "dequantize", "payload_bits", "quantize", "SGADMMConfig", "SGADMMTrainer",
+    "CensorConfig", "GraphState", "graph_bits_per_round", "graph_init_state",
+    "graph_step", "make_graph_quadratic", "Placement", "Topology",
+    "build_topology", "chain_topology", "random_placement", "ring_topology",
+    "star_topology", "torus2d_topology",
 ]

@@ -1,0 +1,91 @@
+"""Censored transmissions (CQ-GGADMM, Ben Issaid et al. 2020).
+
+Q-GADMM transmits every worker's quantized delta every round.  Its successor
+CQ-GGADMM adds *communication censoring*: worker n transmits its new
+quantized model theta_hat_n^{k+1} only when it differs enough from the last
+value its neighbors hold,
+
+    || theta_hat_n^{k+1} - theta_hat_n^{last sent} ||_2  >  tau * xi^k ,
+
+with tau > 0 and a decay rate 0 < xi < 1 so the threshold vanishes and
+censoring never stalls convergence (their Theorem 1 keeps the GADMM rate for
+xi in (theta-linear range)).  A censored round transmits only a 1-bit flag;
+the receivers keep using the previous hat, and — because the skip decision
+is a function of quantized values the sender itself committed — the sender
+rolls its own hat/radius/bits state back too, so both ends of every edge
+stay bit-identical (the algorithm's key invariant survives censoring).
+
+This module is the single source of truth for the rule: the core graph
+reference (``repro.core.gadmm.graph_step``), the distributed trainer
+(``repro.dist.qgadmm`` via ``DistConfig.censor``), and the wire/energy
+accounting (``FLAG_BITS``) all import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: Bits a censored (skipped) directed transmission still costs on the wire:
+#: the censor flag itself.  Charged per link, direction, and phase by
+#: ``QGADMMTrainer.wire_bits_per_round`` and ``comm_model``.
+FLAG_BITS = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CensorConfig:
+    """Decaying censoring threshold tau * xi^k.
+
+    tau: initial threshold, in the units of || theta_hat ||_2.  Larger means
+         more rounds censored early on.
+    xi:  per-round geometric decay in (0, 1); the threshold -> 0 so late
+         rounds always transmit and the fixed point is unchanged.
+    """
+
+    tau: float = 0.05
+    xi: float = 0.9
+
+    def __post_init__(self):
+        assert self.tau > 0, f"tau must be positive, got {self.tau}"
+        assert 0.0 < self.xi < 1.0, f"xi must be in (0, 1), got {self.xi}"
+
+
+def threshold(cfg: CensorConfig, step: Array) -> Array:
+    """tau * xi^k for (possibly traced) round index k."""
+    return cfg.tau * jnp.power(
+        jnp.float32(cfg.xi), jnp.asarray(step).astype(jnp.float32))
+
+
+def delta_sq(hat_new: Any, hat_prev: Any) -> Array:
+    """Per-worker squared L2 distance between stacked (W, ...) hat pytrees.
+
+    Accumulated in f32 regardless of leaf dtype (mixed bf16/f32 pytrees),
+    matching the quantizer's internal arithmetic so every wire_impl computes
+    the identical mask.
+    """
+    parts = [
+        jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2,
+                axis=tuple(range(1, a.ndim)))
+        for a, b in zip(jax.tree.leaves(hat_new), jax.tree.leaves(hat_prev))
+        if a.size
+    ]
+    if not parts:
+        leaves = jax.tree.leaves(hat_new)
+        w = leaves[0].shape[0] if leaves else 0
+        return jnp.zeros((w,), jnp.float32)
+    return sum(parts)
+
+
+def transmit_mask(hat_new: Any, hat_prev: Any, cfg: CensorConfig,
+                  step: Array) -> Array:
+    """(W,) bool: which workers' updates clear the censoring threshold.
+
+    True = transmit (the quantized delta moved far enough), False = censor
+    (send only the 1-bit flag; everyone keeps hat_prev).
+    """
+    thr = threshold(cfg, step)
+    return delta_sq(hat_new, hat_prev) > thr * thr

@@ -13,6 +13,12 @@ and the consumed energy is E = P * tau.  Paper defaults: total system bandwidth
 Bandwidth split: GADMM-family alternates head/tail groups so only half the
 workers transmit per communication round -> each gets (2*Btot/N); PS-based
 algorithms have all N workers competing -> Btot/N.
+
+Beyond the paper's chain, ``round_energy_topology`` prices a round on any
+bipartite topology (core.topology) — per-phase bandwidth sharing within the
+transmitting head/tail group, per-worker broadcast distance from the
+topology-dispatched ``Placement.broadcast_dist`` — and supports CQ-GGADMM
+censoring: skipped workers transmit only the 1-bit censor flag.
 """
 from __future__ import annotations
 
@@ -61,3 +67,39 @@ def round_energy_ps(upload_bits: float, ps_dists: np.ndarray,
     down = tx_energy(download_bits, float(ps_dists.max()),
                      radio.total_bandwidth_hz, radio.slot_s, radio.noise_psd)
     return float(up + down)
+
+
+def round_energy_topology(placement, bits_per_worker, radio: RadioConfig,
+                          sent=None, flag_bits: int | None = None) -> float:
+    """Energy of one GGADMM round on an arbitrary bipartite topology,
+    optionally with censored transmissions (CQ-GGADMM).
+
+    The round has two phases — heads broadcast, then tails broadcast — and
+    only the transmitting group shares the band, so each transmitter in a
+    group of size G gets total_bandwidth / G (the chain's 50/50 head/tail
+    split reduces to the paper's 2*Btot/N rule).  Every worker broadcasts
+    once per round at the power its FARTHEST neighbor requires
+    (placement.broadcast_dist, topology-dispatched: the star hub must reach
+    its farthest leaf).
+
+    With censoring, ``sent`` is an (N,) bool mask of the workers that
+    cleared the threshold this round; the others transmit only the
+    ``flag_bits`` censor flag (default core.censor.FLAG_BITS).
+    """
+    topo = placement.resolved_topology()
+    bd = placement.broadcast_dist()
+    bits = np.broadcast_to(np.asarray(bits_per_worker, float), (topo.n,))
+    if sent is not None:
+        if flag_bits is None:
+            from .censor import FLAG_BITS as flag_bits
+        bits = np.where(np.asarray(sent, bool), bits, float(flag_bits))
+    heads = np.flatnonzero(topo.head_mask)
+    tails = np.flatnonzero(~topo.head_mask)
+    total = 0.0
+    for group in (heads, tails):
+        if not len(group):
+            continue
+        bw = radio.total_bandwidth_hz / len(group)
+        total += sum(tx_energy(bits[i], bd[i], bw, radio.slot_s,
+                               radio.noise_psd) for i in group)
+    return float(total)

@@ -211,6 +211,21 @@ def residuals(state: ChainState) -> tuple[Array, Array]:
     return jnp.sqrt(jnp.sum(r * r)), jnp.max(jnp.abs(r))
 
 
+def _payload_bits_per_worker(cfg: GADMMConfig, d: int) -> int:
+    """Bits of one worker's broadcast payload (shared by the chain and graph
+    accounting)."""
+    if cfg.quantize:
+        header = header_bits(cfg.qcfg.adapt_bits)
+        if cfg.topk_frac < 1.0:
+            import math
+
+            k = max(int(d * cfg.topk_frac), 1)
+            idx_bits = max(int(math.ceil(math.log2(max(d, 2)))), 1)
+            return k * (cfg.qcfg.bits + idx_bits) + header
+        return cfg.qcfg.bits * d + header
+    return 32 * d
+
+
 def bits_per_round(cfg: GADMMConfig, n: int, d: int) -> int:
     """Total bits all N workers transmit in one iteration.
 
@@ -219,13 +234,154 @@ def bits_per_round(cfg: GADMMConfig, n: int, d: int) -> int:
     adaptive); the paper's experiments use fixed bits, i.e. 32 + b*d
     (Sec. V-A).
     """
-    if cfg.quantize:
-        header = header_bits(cfg.qcfg.adapt_bits)
-        if cfg.topk_frac < 1.0:
-            import math
+    return n * _payload_bits_per_worker(cfg, d)
 
-            k = max(int(d * cfg.topk_frac), 1)
-            idx_bits = max(int(math.ceil(math.log2(max(d, 2)))), 1)
-            return n * (k * (cfg.qcfg.bits + idx_bits) + header)
-        return n * (cfg.qcfg.bits * d + header)
-    return n * 32 * d
+
+# ===== generalized topologies + censored transmissions (CQ-GGADMM) =========
+#
+# The chain implementation above is the paper-faithful fast path.  The graph
+# variant below runs the same two-phase Gauss-Seidel sweep on ANY connected
+# bipartite topology (core.topology: ring / star / 2d-torus / arbitrary),
+# with one dual variable per EDGE instead of per chain link, and optional
+# censored transmissions (core.censor): a worker whose freshly quantized
+# model moved less than tau*xi^k keeps silent — every endpoint (itself
+# included) reuses the previous hat, so sender==receiver bit-sync survives.
+# It is the single-host reference the distributed trainer's topology/censor
+# modes are validated against (tests/test_convergence.py).
+
+
+class GraphState(NamedTuple):
+    theta: Array       # (N, d) current primals
+    theta_hat: Array   # (N, d) last *transmitted* quantized models
+    lam: Array         # (E, d) edge duals, canonical head -> tail
+    radius: Array      # (N,) R_n of the last transmitted round
+    bits: Array        # (N,) b_n of the last transmitted round
+    sent: Array        # (N,) bool: did worker n transmit last iteration?
+    key: Array
+    step: Array
+
+
+def graph_init_state(topo, d: int, cfg: GADMMConfig,
+                     seed: int = 0) -> GraphState:
+    n = topo.n
+    return GraphState(
+        theta=jnp.zeros((n, d)),
+        theta_hat=jnp.zeros((n, d)),
+        lam=jnp.zeros((topo.num_edges, d)),
+        radius=jnp.zeros((n,)),
+        bits=jnp.full((n,), cfg.qcfg.bits, jnp.int32),
+        sent=jnp.zeros((n,), bool),
+        key=jax.random.PRNGKey(seed),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_graph_quadratic(xs: Array, ys: Array, rho: float, topo) -> Quadratic:
+    """Per-worker quadratics factored with c_n = deg(n) from the topology."""
+    n, _, d = xs.shape
+    assert n == topo.n, (n, topo.n)
+    xtx = jnp.einsum("nmd,nme->nde", xs, xs)
+    xty = jnp.einsum("nmd,nm->nd", xs, ys)
+    cn = jnp.asarray(topo.degree, jnp.float32)
+    eye = jnp.eye(d)
+    minv = jnp.linalg.inv(xtx + rho * cn[:, None, None] * eye[None])
+    return Quadratic(xtx=xtx, xty=xty, minv=minv)
+
+
+def _graph_consts(topo):
+    """Static jnp views of the topology used inside the jitted step."""
+    import numpy as np
+
+    n = topo.n
+    inc = np.zeros((n, max(topo.num_edges, 1)), np.float32)
+    for e, (h, t) in enumerate(topo.edges):
+        inc[h, e] = inc[t, e] = 1.0
+    return dict(
+        head=jnp.asarray(topo.head_mask),
+        adj=jnp.asarray(topo.adjacency(), jnp.float32),
+        inc=jnp.asarray(inc),
+        e_head=jnp.asarray(topo.edges[:, 0] if topo.num_edges else
+                           np.zeros((0,), np.int64)),
+        e_tail=jnp.asarray(topo.edges[:, 1] if topo.num_edges else
+                           np.zeros((0,), np.int64)),
+    )
+
+
+def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
+                     tc) -> Array:
+    """Closed-form local argmin for every worker on the graph.
+
+    Node n minimizes f_n + s_n * sum_e<n> <lam_e, theta_n - hat_nbr> +
+    rho/2 sum_nbr ||theta_n - hat_nbr||^2 with s_n = +1 for heads (the edge
+    dual's canonical orientation is head -> tail), giving
+      (XtX + deg_n rho I) theta_n = Xty_n - s_n sum_e lam_e
+                                    + rho sum_nbr hat_nbr.
+    """
+    sign = jnp.where(tc["head"], 1.0, -1.0)[:, None]
+    lam_sum = tc["inc"] @ lam if lam.shape[0] else jnp.zeros_like(hat)
+    rhs = q.xty - sign * lam_sum + rho * (tc["adj"] @ hat)
+    return jnp.einsum("nde,ne->nd", q.minv, rhs)
+
+
+def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
+               censor=None) -> GraphState:
+    """One censored GGADMM/CQ-GGADMM iteration on an arbitrary bipartite
+    topology (heads phase + tails phase + per-edge dual update).
+
+    `censor` is an optional core.censor.CensorConfig; when set, a phase's
+    freshly quantized hats are committed only for workers whose update
+    clears the decaying threshold — everyone else's neighbors (and the
+    worker itself) keep the previous hat, and the round is recorded in
+    state.sent for wire accounting (graph_bits_per_round).
+    """
+    from .censor import transmit_mask
+
+    tc = _graph_consts(topo)
+    is_head = tc["head"]
+    key, k_h, k_t = jax.random.split(state.key, 3)
+
+    def phase(theta, hat, lam, radius, bits, active, k):
+        theta_all = _graph_solve_all(q, lam, hat, cfg.rho, tc)
+        theta = jnp.where(active[:, None], theta_all, theta)
+        hat_new, r_new, b_new = _quantize_rows(
+            theta, hat, active, k, radius, bits, cfg)
+        if censor is not None:
+            sent = active & transmit_mask(hat_new, hat, censor, state.step)
+            hat_new = jnp.where(sent[:, None], hat_new, hat)
+            r_new = jnp.where(sent, r_new, radius)
+            b_new = jnp.where(sent, b_new, bits)
+        else:
+            sent = active
+        return theta, hat_new, lam, r_new, b_new, sent
+
+    st = (state.theta, state.theta_hat, state.lam, state.radius, state.bits)
+    *st, sent_h = phase(*st, is_head, k_h)
+    *st, sent_t = phase(*st, ~is_head, k_t)
+    theta, hat, lam, radius, bits = st
+
+    # per-edge dual update (damped, eq. 18 form): lam_e += a*rho*(h_h - h_t)
+    if topo.num_edges:
+        resid = hat[tc["e_head"]] - hat[tc["e_tail"]]
+        lam = lam + cfg.alpha * cfg.rho * resid
+
+    return GraphState(theta=theta, theta_hat=hat, lam=lam, radius=radius,
+                      bits=bits, sent=sent_h | sent_t, key=key,
+                      step=state.step + 1)
+
+
+def graph_bits_per_round(cfg: GADMMConfig, topo, d: int,
+                         sent=None, censored: bool = False):
+    """Bits all workers transmit in one graph iteration (broadcast
+    accounting, same per-worker payload rule as bits_per_round).
+
+    Without censoring every worker broadcasts once; with censoring only the
+    workers with sent=True pay the payload, everyone pays FLAG_BITS for the
+    censor flag.  `sent` may be a traced (N,) bool array — the result is
+    then a traced scalar, summable across rounds."""
+    from .censor import FLAG_BITS
+
+    per = _payload_bits_per_worker(cfg, d)
+    if not censored:
+        return topo.n * per
+    assert sent is not None, "censored accounting needs the sent mask"
+    return jnp.sum(sent.astype(jnp.float32)) * per + topo.n * FLAG_BITS

@@ -1,11 +1,34 @@
-"""Chain topology construction (paper Sec. V-A settings).
+"""Worker topologies: placement, neighbor graphs, and head/tail 2-colorings.
 
-Workers are dropped uniformly at random in a 250x250 m^2 grid.  The
-decentralized algorithms (GADMM / Q-GADMM) connect them in a chain built by the
-nearest-neighbor heuristic of [23]: start from an arbitrary worker (we use the
-one closest to the grid corner) and repeatedly append the nearest unvisited
-worker.  PS-based baselines use the worker with minimum sum-distance to all
-others as the parameter server.
+The source paper (Sec. V-A) fixes a chain: workers dropped uniformly at
+random in a 250x250 m^2 grid, connected by the nearest-neighbor heuristic of
+[23], PS baselines using the min-sum-distance worker as server.  Its
+successor CQ-GGADMM (Ben Issaid et al., 2020) generalizes the bipartite
+head/tail split to arbitrary graphs: any connected bipartite graph admits
+the two-phase Gauss-Seidel sweep, with one dual variable per edge.
+
+This module provides that generalization:
+
+  * ``Topology`` — a connected bipartite neighbor graph over worker ids with
+    a head/tail 2-coloring (``color``; heads are color 0), canonical
+    head->tail ``edges``, a ``neighbors(i)`` API, and a proper edge coloring
+    into matchings (``port``/``matchings``).  The edge coloring is what the
+    distributed trainer consumes: each color class is a partial matching, so
+    one ``jax.lax.ppermute`` per color moves every payload of that class in
+    both directions — the permutations are derived from the graph, never
+    hard-coded ``+-1`` chain shifts.
+  * builders — ``chain_topology`` / ``ring_topology`` / ``star_topology`` /
+    ``torus2d_topology`` / ``bipartite_topology`` (arbitrary edge lists,
+    validated connected + 2-colorable).
+  * ``Placement`` — worker coordinates plus a ``Topology``;
+    ``broadcast_dist`` dispatches on the topology (a worker's transmit power
+    is set by its FARTHEST neighbor, e.g. the star hub must reach its
+    farthest leaf), instead of silently assuming chain ordering.
+
+``random_placement(n, seed, topology=...)`` keeps the paper's grid drop and
+grows the topology axis; the legacy chain fields (``chain``,
+``chain_hop_dist``, ``ps_index``, ``ps_dist``) are retained for the PS
+baselines and the chain benchmarks.
 """
 from __future__ import annotations
 
@@ -14,34 +37,289 @@ import dataclasses
 import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
+# ----------------------------------------------------------- edge coloring --
+def _edge_coloring(n: int, edges: np.ndarray) -> np.ndarray:
+    """Proper edge coloring of a bipartite multigraph-free graph.
+
+    Koenig's theorem: a bipartite graph with maximum degree C is C-edge-
+    colorable; this is the classic constructive proof.  For each edge (u, v)
+    take colors a free at u and b free at v; if they differ, flip the
+    maximal alternating a/b path starting at v (it cannot reach u in a
+    bipartite graph), freeing a at v.
+
+    Returns ``port``: an (n, C) int array, ``port[i, c]`` = the neighbor
+    matched to worker i in color class c, or -1.  Each color class is a
+    matching — directly usable as a ppermute permutation.
+    """
+    if len(edges) == 0:
+        return -np.ones((n, 0), np.int64)
+    deg = np.bincount(np.asarray(edges).ravel(), minlength=n)
+    c_max = int(deg.max())
+    port = -np.ones((n, c_max), np.int64)
+
+    def first_free(x: int) -> int:
+        for c in range(c_max):
+            if port[x, c] < 0:
+                return c
+        raise AssertionError("edge coloring needs more colors than max degree"
+                             " — graph is not simple/bipartite")
+
+    for u, v in np.asarray(edges):
+        u, v = int(u), int(v)
+        a, b = first_free(u), first_free(v)
+        if a != b:
+            # walk the alternating a/b path from v and flip its colors
+            path = []
+            x, c = v, a
+            while port[x, c] >= 0:
+                y = int(port[x, c])
+                path.append((x, y, c))
+                x, c = y, (b if c == a else a)
+            for x, y, c in path:
+                port[x, c] = port[y, c] = -1
+            for x, y, c in path:
+                o = b if c == a else a
+                port[x, o] = y
+                port[y, o] = x
+        port[u, a] = v
+        port[v, a] = u
+    return port
+
+
+def _two_color(n: int, edges: np.ndarray) -> np.ndarray:
+    """BFS head/tail 2-coloring; raises if the graph is not bipartite or not
+    connected (GADMM needs both: phases alternate colors, consensus needs
+    connectivity)."""
+    adj: list[list[int]] = [[] for _ in range(n)]
+    for u, v in np.asarray(edges):
+        adj[int(u)].append(int(v))
+        adj[int(v)].append(int(u))
+    color = -np.ones(n, np.int8)
+    color[0] = 0
+    queue = [0]
+    while queue:
+        x = queue.pop()
+        for y in adj[x]:
+            if color[y] < 0:
+                color[y] = 1 - color[x]
+                queue.append(y)
+            elif color[y] == color[x]:
+                raise ValueError("topology is not bipartite: edge "
+                                 f"({x}, {y}) joins two color-{color[x]} "
+                                 "workers — no head/tail split exists")
+    if n and (color < 0).any():
+        raise ValueError("topology is not connected: workers "
+                         f"{np.flatnonzero(color < 0).tolist()} are "
+                         "unreachable from worker 0")
+    return color
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Topology:
+    """Connected bipartite worker graph with a head/tail coloring.
+
+    edges: (E, 2) int, canonically oriented head -> tail (edges[:, 0] is the
+           head endpoint).  One GADMM dual variable lives on each edge.
+    color: (N,) int8 node coloring; heads = 0 transmit in phase one, tails =
+           1 in phase two.
+    port:  (N, C) int edge coloring, C = max degree: ``port[i, c]`` is i's
+           neighbor via the color-c matching (or -1).  Color classes are the
+           ppermute rounds of the distributed trainer.
+    """
+
+    kind: str
+    n: int
+    edges: np.ndarray
+    color: np.ndarray
+    port: np.ndarray
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def num_ports(self) -> int:
+        return self.port.shape[1]
+
+    @property
+    def head_mask(self) -> np.ndarray:
+        return self.color == 0
+
+    @property
+    def degree(self) -> np.ndarray:
+        return (self.port >= 0).sum(axis=1)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        """Worker i's neighbors (sorted by edge-color port index)."""
+        row = self.port[i]
+        return row[row >= 0]
+
+    def matchings(self) -> list[np.ndarray]:
+        """Edge color classes, each a (Mc, 2) array of (u, v) with u < v."""
+        out = []
+        for c in range(self.num_ports):
+            pairs = [(i, int(p)) for i, p in enumerate(self.port[:, c])
+                     if 0 <= p and i < p]
+            out.append(np.asarray(pairs, np.int64).reshape(-1, 2))
+        return out
+
+    def adjacency(self) -> np.ndarray:
+        a = np.zeros((self.n, self.n), bool)
+        if len(self.edges):
+            a[self.edges[:, 0], self.edges[:, 1]] = True
+            a[self.edges[:, 1], self.edges[:, 0]] = True
+        return a
+
+
+def _make(kind: str, n: int, raw_edges,
+          prefer_head: int | None = None) -> Topology:
+    edges = np.asarray(sorted({(min(int(u), int(v)), max(int(u), int(v)))
+                               for u, v in raw_edges if int(u) != int(v)}),
+                       np.int64).reshape(-1, 2)
+    color = _two_color(n, edges)
+    if prefer_head is not None and color[prefer_head] == 1:
+        color = (1 - color).astype(np.int8)  # global flip: coloring is
+        # unique up to swapping heads/tails on a connected bipartite graph
+    # canonical head -> tail orientation
+    if len(edges):
+        flip = color[edges[:, 0]] == 1
+        edges = np.where(flip[:, None], edges[:, ::-1], edges)
+        edges = edges[np.lexsort((edges[:, 1], edges[:, 0]))]
+    port = _edge_coloring(n, edges)
+    return Topology(kind=kind, n=n, edges=edges, color=color, port=port)
+
+
+def chain_topology(n: int) -> Topology:
+    """The paper's chain: worker i <-> i+1; heads at even positions."""
+    assert n >= 1
+    return _make("chain", n, [(i, i + 1) for i in range(n - 1)])
+
+
+def ring_topology(n: int) -> Topology:
+    """Chain closed into a cycle.  n must be even (odd cycles are not
+    2-colorable); n == 2 degenerates to the 2-chain."""
+    assert n >= 2 and n % 2 == 0, \
+        f"ring needs an even worker count (odd cycles are not bipartite), got {n}"
+    return _make("ring", n, [(i, (i + 1) % n) for i in range(n)])
+
+
+def star_topology(n: int, hub: int = 0) -> Topology:
+    """PS-like star: every worker connects only to the hub.  The hub is the
+    single head (transmits alone in phase one, like a PS downlink); leaves
+    are tails."""
+    assert n >= 2 and 0 <= hub < n
+    edges = [(hub, i) for i in range(n) if i != hub]
+    return _make("star", n, edges, prefer_head=hub)
+
+
+def torus2d_topology(rows: int, cols: int) -> Topology:
+    """2D torus (rows x cols grid with wraparound).  Both dims must be even
+    for 2-colorability; dim == 2 degenerates gracefully (the wrap edge
+    coincides with the direct edge and is deduplicated)."""
+    assert rows >= 2 and cols >= 2 and rows % 2 == 0 and cols % 2 == 0, \
+        f"2d-torus needs even dims >= 2, got {rows}x{cols}"
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            edges.append((i, r * cols + (c + 1) % cols))
+            edges.append((i, ((r + 1) % rows) * cols + c))
+    return _make("torus2d", rows * cols, edges)
+
+
+def bipartite_topology(n: int, edges) -> Topology:
+    """Arbitrary connected bipartite graph from an explicit edge list; the
+    head/tail coloring is recovered by BFS (raises if none exists)."""
+    return _make("bipartite", n, edges)
+
+
+def _torus_dims(n: int) -> tuple[int, int]:
+    """Most-square even x even factorization of n (requires n % 4 == 0)."""
+    assert n % 4 == 0, f"2d-torus needs num_workers % 4 == 0, got {n}"
+    best = (2, n // 2)
+    r = 2
+    while r * r <= n:
+        if n % r == 0 and r % 2 == 0 and (n // r) % 2 == 0:
+            best = (r, n // r)
+        r += 2
+    return best
+
+
+TOPOLOGY_KINDS = ("chain", "ring", "star", "torus2d")
+
+
+def build_topology(kind_or_topo, n: int) -> Topology:
+    """Resolve a topology spec (a kind name or an explicit Topology) for n
+    workers — the single entry point used by DistConfig consumers."""
+    if isinstance(kind_or_topo, Topology):
+        assert kind_or_topo.n == n, (kind_or_topo.n, n)
+        return kind_or_topo
+    kind = str(kind_or_topo)
+    if kind == "chain":
+        return chain_topology(n)
+    if kind == "ring":
+        return ring_topology(n)
+    if kind == "star":
+        return star_topology(n)
+    if kind == "torus2d":
+        return torus2d_topology(*_torus_dims(n))
+    raise ValueError(f"unknown topology {kind!r}; expected one of "
+                     f"{TOPOLOGY_KINDS} or a Topology instance")
+
+
+# --------------------------------------------------------------- placement --
+@dataclasses.dataclass(frozen=True, eq=False)
 class Placement:
-    positions: np.ndarray      # (N, 2) worker coordinates in meters
-    chain: np.ndarray          # (N,) permutation: chain order of worker ids
-    ps_index: int              # worker id acting as parameter server
+    positions: np.ndarray       # (N, 2) worker coordinates in meters
+    chain: np.ndarray           # (N,) permutation: chain order of worker ids
+    ps_index: int               # worker id acting as parameter server
     chain_hop_dist: np.ndarray  # (N-1,) distance between chain neighbors
-    ps_dist: np.ndarray        # (N,) distance of every worker to the PS
+    ps_dist: np.ndarray         # (N,) distance of every worker to the PS
+    topology: Topology | None = None  # None = legacy chain placement
 
     @property
     def n(self) -> int:
         return len(self.positions)
 
-    def broadcast_dist(self) -> np.ndarray:
-        """Per-worker transmit distance on the chain: the farther neighbor.
+    def resolved_topology(self) -> Topology:
+        if self.topology is not None:
+            return self.topology
+        # legacy chain placements: graph over worker ids from the chain order
+        order = self.chain
+        return _make("chain", self.n,
+                     [(int(order[j]), int(order[j + 1]))
+                      for j in range(self.n - 1)],
+                     prefer_head=int(order[0]) if self.n else None)
 
-        Worker i (chain position) broadcasts its model to both neighbors; the
-        transmit power is set by the farther of the two.
+    def broadcast_dist(self) -> np.ndarray:
+        """Per-worker transmit distance: the FARTHEST topology neighbor.
+
+        A worker broadcasts one payload to all its neighbors; its transmit
+        power is set by the farthest one.  Dispatches on the placement's
+        topology (the old implementation silently assumed chain ordering):
+        on a star the hub must reach its farthest leaf (PS-downlink-like),
+        on a ring/torus each worker looks at its cycle/grid neighbors.
+        Returned in worker-id order (index i = worker i).
         """
-        d = self.chain_hop_dist
-        out = np.empty(self.n)
-        out[0] = d[0]
-        out[-1] = d[-1]
-        if self.n > 2:
-            out[1:-1] = np.maximum(d[:-1], d[1:])
+        topo = self.resolved_topology()
+        out = np.zeros(self.n)
+        for i in range(self.n):
+            nbrs = topo.neighbors(i)
+            if len(nbrs):
+                out[i] = np.linalg.norm(
+                    self.positions[nbrs] - self.positions[i], axis=1).max()
         return out
 
 
-def random_placement(n: int, seed: int, grid: float = 250.0) -> Placement:
+def random_placement(n: int, seed: int, grid: float = 250.0,
+                     topology: str = "chain") -> Placement:
+    """Drop n workers uniformly in the grid and connect them.
+
+    topology='chain' reproduces the paper: nearest-neighbor chain heuristic
+    of [23].  'ring' closes that chain into a cycle (even n), 'star' uses
+    the min-sum-distance worker as hub (the PS-baseline server choice), and
+    'torus2d' lays the chain order onto the most-square even torus grid.
+    """
     rng = np.random.default_rng(seed)
     pos = rng.uniform(0.0, grid, size=(n, 2))
     # nearest-neighbor chain heuristic
@@ -58,12 +336,41 @@ def random_placement(n: int, seed: int, grid: float = 250.0) -> Placement:
     # PS = min sum distance to all others
     dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
     ps = int(np.argmin(dmat.sum(axis=1)))
+
+    if topology == "chain":
+        topo = _make("chain", n, [(int(chain[j]), int(chain[j + 1]))
+                                  for j in range(n - 1)],
+                     prefer_head=int(chain[0]))
+    elif topology == "ring":
+        assert n >= 2 and n % 2 == 0, \
+            f"ring needs an even worker count (odd cycles are not " \
+            f"bipartite), got {n}"
+        topo = _make("ring", n, [(int(chain[j]), int(chain[(j + 1) % n]))
+                                 for j in range(n)],
+                     prefer_head=int(chain[0]))
+    elif topology == "star":
+        topo = star_topology(n, hub=ps)
+    elif topology == "torus2d":
+        rows, cols = _torus_dims(n)
+        grid_ids = chain.reshape(rows, cols)
+        edges = []
+        for r in range(rows):
+            for c in range(cols):
+                edges.append((int(grid_ids[r, c]),
+                              int(grid_ids[r, (c + 1) % cols])))
+                edges.append((int(grid_ids[r, c]),
+                              int(grid_ids[(r + 1) % rows, c])))
+        topo = _make("torus2d", n, edges)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+
     return Placement(
         positions=pos,
         chain=chain,
         ps_index=ps,
         chain_hop_dist=hop,
         ps_dist=dmat[ps],
+        topology=topo,
     )
 
 

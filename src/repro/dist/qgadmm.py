@@ -46,6 +46,25 @@ beyond-paper), letting XLA hide the chain latency behind compute.
 of all workers (benchmarks/bench_jacobi.py measures the trade-off), and
 `num_workers=1` degenerates to plain FSDP data-parallel Adam with no chain
 collectives at all.
+
+Beyond the paper's chain, `DistConfig.topology` runs the same two-phase
+sweep on any connected bipartite worker graph (core.topology: 'ring',
+'star', '2d-torus', or an explicit Topology).  The neighbor state
+generalizes from left/right to one slot per EDGE COLOR of the graph: a
+proper edge coloring (Koenig) splits the edges into matchings, and each
+matching is exactly one jax.lax.ppermute permutation — the collective
+schedule is derived from the graph, never hard-coded +-1 shifts.  Duals
+live per edge (canonical head->tail orientation), mirrored by both
+endpoints.
+
+`DistConfig.censor` adds CQ-GGADMM censored transmissions (core.censor): a
+worker whose freshly quantized model moved less than tau*xi^k in L2 keeps
+silent for the round — the wire carries only a 1-bit censor flag, every
+receiver (and the sender itself) reuses the previous hat, and because the
+skip decision is computed from quantized values both ends already share,
+the sender==receiver bit-sync invariant survives.  `wire_bits_per_round`
+then becomes data-dependent: skipped links are billed FLAG_BITS instead of
+the payload row, and the step reports a `skip_rate` metric.
 """
 from __future__ import annotations
 
@@ -59,8 +78,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import censor as censor_mod
+from repro.core.censor import CensorConfig
 from repro.core.gadmm import GADMMConfig
 from repro.core.quantizer import _next_bits
+from repro.core.topology import Topology, build_topology
 from repro.kernels.pack import ops as pack_ops
 from repro.kernels.pack.ref import packed_len
 from repro.kernels.quantize import quantize as q_kernel
@@ -102,6 +124,13 @@ class DistConfig:
     overlap:     double-buffer the gauss-seidel exchange: tails run their
                  local iterations against the previous neighbor hats while
                  the heads' payload is in flight (one-exchange staleness).
+    topology:    worker graph — 'chain' (paper), 'ring', 'star', 'torus2d',
+                 or an explicit core.topology.Topology (any connected
+                 bipartite graph).  Determines the phases' head/tail split
+                 and the ppermute schedule (one permutation per edge color).
+    censor:      optional core.censor.CensorConfig: transmit a phase's
+                 quantized delta only when ||hat_new - hat_prev||_2 >
+                 tau*xi^k; skipped links cost 1 flag bit on the wire.
     """
 
     num_workers: int
@@ -117,10 +146,13 @@ class DistConfig:
     seq_shard: bool = False
     wire_impl: str = "jnp"
     overlap: bool = False
+    topology: Any = "chain"
+    censor: CensorConfig | None = None
 
     def __post_init__(self):
         assert self.mode in ("gauss-seidel", "jacobi"), self.mode
         assert self.radius_mode in ("global", "per_tensor"), self.radius_mode
+        build_topology(self.topology, self.num_workers)  # validate early
         assert self.wire_impl in ("jnp", "pallas", "pallas_compiled"), \
             self.wire_impl
         assert not (self.overlap and self.mode != "gauss-seidel"), \
@@ -141,14 +173,19 @@ class DistConfig:
 
 class DistState(NamedTuple):
     """Replicated-per-worker chain state; every pytree leaf is stacked with a
-    leading (num_workers,) dim sharded over the mesh 'worker' axis."""
+    leading (num_workers,) dim sharded over the mesh 'worker' axis.
+
+    Neighbor state is indexed by EDGE COLOR (port): the topology's edges are
+    edge-colored into C = max-degree matchings, and port c of worker w holds
+    the state of w's color-c partner (untouched rows where w has no color-c
+    edge).  A chain has C = 2 ports — the old hat_left/hat_right — a star
+    has C = n-1, a 2d-torus C = 4."""
 
     theta: Any      # current primal parameters
     theta_hat: Any  # own last-quantized model (== what neighbors hold)
-    hat_left: Any   # reconstruction of left neighbor's hat (zeros at w=0)
-    hat_right: Any  # reconstruction of right neighbor's hat (zeros at w=W-1)
-    lam_left: Any   # dual on edge (w-1, w); row 0 stays zero
-    lam_right: Any  # dual on edge (w, w+1); row W-1 stays zero
+    hat_nbr: Any    # tuple over ports: reconstruction of the partner's hat
+    lam_nbr: Any    # tuple over ports: dual on the port's edge, canonical
+                    # head->tail orientation (both endpoints mirror it)
     radius: Array   # (W,) global mode | (W, n_tensors) per_tensor mode
     bits: Array     # (W,) int32
     opt_mu: Any     # local Adam first moment
@@ -163,6 +200,7 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
     """State at k=0: every worker starts from the same init, hats at zero
     (the paper initializes theta_hat^0 = 0)."""
     w = dcfg.num_workers
+    topo = build_topology(dcfg.topology, w)
     k_init, k_state = jax.random.split(key)
     params = init_fn(k_init)
     if dcfg.state_dtype is not None:
@@ -175,9 +213,12 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
     n_tensors = len(jax.tree.leaves(theta))
     radius = (jnp.zeros((w,), jnp.float32) if dcfg.radius_mode == "global"
               else jnp.zeros((w, n_tensors), jnp.float32))
+    ports = topo.num_ports
     return DistState(
-        theta=theta, theta_hat=zeros(), hat_left=zeros(), hat_right=zeros(),
-        lam_left=zeros(), lam_right=zeros(), radius=radius,
+        theta=theta, theta_hat=zeros(),
+        hat_nbr=tuple(zeros() for _ in range(ports)),
+        lam_nbr=tuple(zeros() for _ in range(ports)),
+        radius=radius,
         bits=jnp.full((w,), dcfg.gadmm.qcfg.bits, jnp.int32),
         opt_mu=zeros(), opt_nu=zeros(),
         opt_t=jnp.zeros((w,), jnp.int32),
@@ -226,6 +267,7 @@ class QGADMMTrainer:
         self.cfg = cfg
         self.dcfg = dcfg
         self.mesh = worker_mesh
+        self.topo: Topology = build_topology(dcfg.topology, dcfg.num_workers)
 
     # ------------------------------------------------------------ specs ----
     def batch_specs(self, batch):
@@ -246,8 +288,8 @@ class QGADMMTrainer:
         wspec = P("worker") if self.dcfg.num_workers > 1 else P(None)
         return DistState(
             theta=pspec(state.theta), theta_hat=pspec(state.theta_hat),
-            hat_left=pspec(state.hat_left), hat_right=pspec(state.hat_right),
-            lam_left=pspec(state.lam_left), lam_right=pspec(state.lam_right),
+            hat_nbr=tuple(pspec(h) for h in state.hat_nbr),
+            lam_nbr=tuple(pspec(l) for l in state.lam_nbr),
             radius=(wspec if state.radius.ndim == 1
                     else P(*wspec, None)),
             bits=wspec, opt_mu=pspec(state.opt_mu), opt_nu=pspec(state.opt_nu),
@@ -330,12 +372,25 @@ class QGADMMTrainer:
             off += size
         return jax.tree.unflatten(treedef, out)
 
-    def _make_exchange(self, sharded: bool):
-        """payload pytree of (W, ...) arrays -> (from_left, from_right).
+    def _port_perms(self) -> list[list[tuple[int, int]]]:
+        """One ppermute permutation per edge color, derived from the graph.
 
-        from_left[w] = payload[w-1] (zeros at w=0); from_right[w] =
-        payload[w+1] (zeros at w=W-1).  The sharded path sends each device's
-        shard to the matching device of the neighbor worker group with
+        Color class c is a matching, so sending BOTH directions of each of
+        its edges is still a valid (partial) permutation: every worker
+        appears at most once as source and once as destination.  Workers
+        without a color-c edge receive ppermute's zero fill."""
+        perms = []
+        for m in self.topo.matchings():
+            perms.append([(int(u), int(v)) for u, v in m]
+                         + [(int(v), int(u)) for u, v in m])
+        return perms
+
+    def _make_exchange(self, sharded: bool):
+        """payload pytree of (W, ...) arrays -> tuple over ports.
+
+        result[c][w] = payload[partner of w in edge color c] (zeros where w
+        has no color-c edge).  The sharded path sends each device's shard to
+        the matching device of the partner worker group with
         jax.lax.ppermute — uint8 payloads stay uint8 on the wire, and with
         pack_wire each device nibble-packs its own shard right before the
         ppermute and unpacks right after (pack4/unpack4 run as purely local
@@ -344,23 +399,31 @@ class QGADMMTrainer:
         miscompiles).
         """
         w = self.dcfg.num_workers
+        topo = self.topo
+        ports = topo.num_ports
         if not sharded:
-            # Unsharded reference: array shifts; packing would be an exact
-            # roundtrip (contract-tested in tests/test_kernels.py), so the
-            # levels move unpacked.
+            # Unsharded reference: gather by the partner table; packing
+            # would be an exact roundtrip (contract-tested in
+            # tests/test_kernels.py), so the levels move unpacked.
+            partner = topo.port  # (W, C) int, -1 where no edge
+            idxs = [jnp.asarray(np.where(partner[:, c] >= 0, partner[:, c],
+                                         np.arange(w)))
+                    for c in range(ports)]
+            masks = [jnp.asarray(partner[:, c] >= 0) for c in range(ports)]
+
             def exchange(payload):
-                down = jax.tree.map(
-                    lambda x: jnp.concatenate(
-                        [jnp.zeros_like(x[:1]), x[:-1]], axis=0), payload)
-                up = jax.tree.map(
-                    lambda x: jnp.concatenate(
-                        [x[1:], jnp.zeros_like(x[:1])], axis=0), payload)
-                return down, up
+                outs = []
+                for c in range(ports):
+                    idx, m = idxs[c], masks[c]
+                    outs.append(jax.tree.map(
+                        lambda x: jnp.where(
+                            _bmask(m, x), jnp.take(x, idx, axis=0),
+                            jnp.zeros_like(x)), payload))
+                return tuple(outs)
             return exchange
 
         mesh = self.mesh
-        perm_r = [(i, i + 1) for i in range(w - 1)]
-        perm_l = [(i + 1, i) for i in range(w - 1)]
+        perms = self._port_perms()
         pack_impl = self._pack_impl()
         wire_spec = P("worker", ("fsdp", "model"))
 
@@ -389,14 +452,13 @@ class QGADMMTrainer:
                             recv, n_loc, impl=pack_impl).reshape(x.shape)
                     return jax.lax.ppermute(x, "worker", perm)
 
-                from_left = jax.tree.map(
-                    lambda x, f: send(x, f, perm_r), p, packed_leaves)
-                from_right = jax.tree.map(
-                    lambda x, f: send(x, f, perm_l), p, packed_leaves)
-                return from_left, from_right
+                return tuple(
+                    jax.tree.map(lambda x, f: send(x, f, perm),
+                                 p, packed_leaves)
+                    for perm in perms)
 
             return shard_map(body, mesh=mesh, in_specs=(specs,),
-                             out_specs=(specs, specs),
+                             out_specs=(specs,) * ports,
                              check_rep=False)(payload)
 
         return exchange
@@ -550,27 +612,33 @@ class QGADMMTrainer:
         total, _ = jax.lax.scan(body, jnp.zeros(()), split)
         return total / mb
 
-    def _local_loss(self, theta_w, batch_w, lam_l, lam_r, hat_l, hat_r,
-                    has_l, has_r):
-        """Stochastic augmented Lagrangian of eq. 14/16 for one worker."""
+    def _local_loss(self, theta_w, batch_w, lam_nbr, hat_nbr, pmask, sign):
+        """Stochastic augmented Lagrangian of eq. 14/16 for one worker.
+
+        lam_nbr / hat_nbr: per-port tuples of this worker's edge duals and
+        neighbor-hat reconstructions; pmask[c] = 1.0 iff the worker has a
+        color-c edge; sign = +1 for heads, -1 for tails (the edge dual's
+        canonical orientation is head -> tail, so the head sees
+        <lam, theta - hat_nbr> and the tail <lam, hat_nbr - theta>)."""
         rho = self.dcfg.gadmm.rho
         f = self._data_loss(theta_w, batch_w)
-        dual = (_tvdot(lam_l, jax.tree.map(jnp.subtract, hat_l, theta_w))
-                + _tvdot(lam_r, jax.tree.map(jnp.subtract, theta_w, hat_r)))
-        prox = 0.5 * rho * (has_l * _tsqnorm(hat_l, theta_w)
-                            + has_r * _tsqnorm(theta_w, hat_r))
-        return f + dual + prox, f
+        dual = jnp.zeros(())
+        prox = jnp.zeros(())
+        for c in range(len(hat_nbr)):
+            diff = jax.tree.map(jnp.subtract, theta_w, hat_nbr[c])
+            dual = dual + pmask[c] * sign * _tvdot(lam_nbr[c], diff)
+            prox = prox + pmask[c] * _tsqnorm(theta_w, hat_nbr[c])
+        return f + dual + 0.5 * rho * prox, f
 
-    def _local_opt(self, theta, mu, nu, t, batch_w, lam_l, lam_r, hat_l,
-                   hat_r, has_l, has_r):
+    def _local_opt(self, theta, mu, nu, t, batch_w, lam_nbr, hat_nbr,
+                   pmask, sign):
         """local_iters Adam steps on the augmented Lagrangian (one worker)."""
         lr = self.dcfg.local_lr
         grad_fn = jax.value_and_grad(self._local_loss, has_aux=True)
 
         def body(carry, _):
             th, m, v, tt = carry
-            (_, f), g = grad_fn(th, batch_w, lam_l, lam_r, hat_l, hat_r,
-                                has_l, has_r)
+            (_, f), g = grad_fn(th, batch_w, lam_nbr, hat_nbr, pmask, sign)
             tt = tt + 1
             tf = tt.astype(jnp.float32)
             m = jax.tree.map(
@@ -604,26 +672,30 @@ class QGADMMTrainer:
     def _build_step(self, sharded: bool):
         dcfg = self.dcfg
         g = dcfg.gadmm
+        cc = dcfg.censor
         w = dcfg.num_workers
+        topo = self.topo
+        ports = topo.num_ports
         if sharded and "worker" in self.mesh.shape:
             assert self.mesh.shape["worker"] == w, (
                 f"mesh worker axis {self.mesh.shape['worker']} != "
                 f"num_workers {w}")
-        idx = np.arange(w)
-        has_l = jnp.asarray(idx > 0)
-        has_r = jnp.asarray(idx < w - 1)
-        is_head = jnp.asarray(idx % 2 == 0)
+        pmask_np = topo.port >= 0                       # (W, C) static
+        pmask = jnp.asarray(pmask_np, jnp.float32)
+        port_on = [jnp.asarray(pmask_np[:, c]) for c in range(ports)]
+        is_head = jnp.asarray(topo.head_mask)
+        sign = jnp.where(is_head, 1.0, -1.0).astype(jnp.float32)
         all_on = jnp.ones((w,), bool)
-        exchange = self._make_exchange(sharded) if w > 1 else None
+        exchange = (self._make_exchange(sharded) if topo.num_edges else None)
 
-        def phase_compute(st, batch, active, key):
-            """Local Adam + quantize for the active workers; returns the
-            updated state and the wire payload (exchange NOT yet applied)."""
-            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
-             mu, nu, t) = st
+        def phase_compute(st, batch, active, key, step_idx):
+            """Local Adam + quantize (+ censor) for the active workers;
+            returns the updated state and the wire payload (exchange NOT yet
+            applied).  payload['sent'] is the per-worker transmit flag — the
+            1-bit censor sideband that rides every link."""
+            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
             new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
-                theta, mu, nu, t, batch, lam_l, lam_r, hat_l, hat_r,
-                has_l.astype(jnp.float32), has_r.astype(jnp.float32))
+                theta, mu, nu, t, batch, lam_nbr, hat_nbr, pmask, sign)
             theta = _twhere(active, new_theta, theta)
             mu = _twhere(active, new_mu, mu)
             nu = _twhere(active, new_nu, nu)
@@ -632,117 +704,151 @@ class QGADMMTrainer:
             if g.quantize:
                 q_wire, hat_new, r_new, b_new = self._quantize_all(
                     theta, hat, bits, radius, key, sharded)
-                hat = _twhere(active, hat_new, hat)
-                radius = jnp.where(_bmask(active, r_new), r_new, radius)
-                bits = jnp.where(active, b_new, bits)
+                if cc is not None:
+                    # CQ-GGADMM censoring: commit + transmit only when the
+                    # quantized model moved past the decaying threshold.
+                    # hat_new is the committed (per-leaf-cast) value, so the
+                    # mask is identical for every wire_impl and on both the
+                    # unsharded and sharded paths.
+                    sent = active & censor_mod.transmit_mask(
+                        hat_new, hat, cc, step_idx)
+                else:
+                    sent = active
+                hat = _twhere(sent, hat_new, hat)
+                radius = jnp.where(_bmask(sent, r_new), r_new, radius)
+                bits = jnp.where(sent, b_new, bits)
                 payload = {"wire": self._finish_wire(q_wire),
-                           "radius": r_new, "bits": b_new}
+                           "radius": r_new, "bits": b_new, "sent": sent}
             else:
                 # full-precision GADMM: track the would-be radius for metrics,
-                # then "transmit" theta itself (hat == theta).
+                # then "transmit" theta itself (hat == theta).  Censoring
+                # applies identically (this is C-GGADMM).
                 per_leaf_r = self._per_leaf_radius(
                     jax.tree.leaves(theta), jax.tree.leaves(hat))  # (W, L)
-                hat = _twhere(active, theta, hat)
+                if cc is not None:
+                    sent = active & censor_mod.transmit_mask(
+                        theta, hat, cc, step_idx)
+                else:
+                    sent = active
+                hat = _twhere(sent, theta, hat)
                 r_new = (jnp.max(per_leaf_r, axis=1)
                          if radius.ndim == 1 and per_leaf_r.shape[1]
                          else (per_leaf_r if radius.ndim > 1
                                else jnp.zeros((w,), jnp.float32)))
-                radius = jnp.where(_bmask(active, r_new), r_new, radius)
+                radius = jnp.where(_bmask(sent, r_new), r_new, radius)
                 payload = {"wire": self._flatten_wire(
-                    jax.tree.leaves(hat), jnp.float32)}
+                    jax.tree.leaves(hat), jnp.float32), "sent": sent}
 
-            return (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
+            return (theta, hat, hat_nbr, lam_nbr, radius, bits,
                     mu, nu, t), payload, f0
 
-        def phase_apply(st, recv, active):
-            """Fold the exchanged payloads into the neighbor-hat copies."""
-            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
-             mu, nu, t) = st
-            from_l, from_r = recv
-            # active[w-1] / active[w+1]: did my neighbor transmit?
-            sent_l = jnp.concatenate([jnp.zeros((1,), bool), active[:-1]])
-            sent_r = jnp.concatenate([active[1:], jnp.zeros((1,), bool)])
-            templates = jax.tree.leaves(theta)
-            d = sum(_leaf_sizes(templates))
-            if g.quantize:
-                ql = self._strip_wire(from_l["wire"], d)
-                qr = self._strip_wire(from_r["wire"], d)
-                hat_l = _twhere(sent_l & has_l, self._dequantize_all(
-                    ql, hat_l, from_l["radius"], from_l["bits"]), hat_l)
-                hat_r = _twhere(sent_r & has_r, self._dequantize_all(
-                    qr, hat_r, from_r["radius"], from_r["bits"]), hat_r)
-            else:
-                hl_leaves = self._unflatten_wire(from_l["wire"], templates)
-                hr_leaves = self._unflatten_wire(from_r["wire"], templates)
-                treedef = jax.tree.structure(theta)
-                cast = lambda ls, ref: jax.tree.unflatten(
-                    treedef, [l.astype(r.dtype) for l, r in
-                              zip(ls, jax.tree.leaves(ref))])
-                hat_l = _twhere(sent_l & has_l, cast(hl_leaves, hat_l),
-                                hat_l)
-                hat_r = _twhere(sent_r & has_r, cast(hr_leaves, hat_r),
-                                hat_r)
-            return (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
-                    mu, nu, t)
+        def phase_apply(st, recv):
+            """Fold the exchanged payloads into the per-port neighbor hats.
 
-        def phase(st, batch, active, key):
-            st, payload, f0 = phase_compute(st, batch, active, key)
-            if exchange is not None:
-                st = phase_apply(st, exchange(payload), active)
-            return st, f0
+            recv[c]['sent'][w] is the exchanged censor flag: did w's color-c
+            partner transmit?  Censored (or phase-inactive) partners leave
+            the stored hat untouched — exactly what their own rolled-back
+            state holds, preserving bit-sync."""
+            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+            templates = jax.tree.leaves(theta)
+            treedef = jax.tree.structure(theta)
+            d = sum(_leaf_sizes(templates))
+            new_nbr = []
+            for c in range(ports):
+                from_c = recv[c]
+                got = from_c["sent"] & port_on[c]
+                if g.quantize:
+                    qc = self._strip_wire(from_c["wire"], d)
+                    dec = self._dequantize_all(
+                        qc, hat_nbr[c], from_c["radius"], from_c["bits"])
+                    new_nbr.append(_twhere(got, dec, hat_nbr[c]))
+                else:
+                    ls = self._unflatten_wire(from_c["wire"], templates)
+                    cast = jax.tree.unflatten(
+                        treedef, [l.astype(r.dtype) for l, r in
+                                  zip(ls, jax.tree.leaves(hat_nbr[c]))])
+                    new_nbr.append(_twhere(got, cast, hat_nbr[c]))
+            return (theta, hat, tuple(new_nbr), lam_nbr, radius, bits,
+                    mu, nu, t)
 
         def step(state: DistState, batch):
             key, k1, k2 = jax.random.split(state.key, 3)
-            st = (state.theta, state.theta_hat, state.hat_left,
-                  state.hat_right, state.lam_left, state.lam_right,
-                  state.radius, state.bits, state.opt_mu, state.opt_nu,
-                  state.opt_t)
+            st = (state.theta, state.theta_hat, state.hat_nbr,
+                  state.lam_nbr, state.radius, state.bits, state.opt_mu,
+                  state.opt_nu, state.opt_t)
+            sent_phases = []
+
+            def phase(st, active, k):
+                st, payload, f0 = phase_compute(st, batch, active, k,
+                                                state.step)
+                sent_phases.append(payload["sent"])
+                if exchange is not None:
+                    st = phase_apply(st, exchange(payload))
+                return st, f0
+
             if dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
                 # double-buffered exchange: put the heads' payload on the
                 # wire, run the tails' local iterations against the PREVIOUS
                 # neighbor hats while it is in flight, then fold both
                 # exchanges in.  XLA sees no data dependence between the
-                # heads' ppermute and the tails' compute, so the chain
+                # heads' ppermute and the tails' compute, so the graph
                 # latency hides behind the Adam iterations.
-                st, pl_h, f0 = phase_compute(st, batch, is_head, k1)
+                st, pl_h, f0 = phase_compute(st, batch, is_head, k1,
+                                             state.step)
+                sent_phases.append(pl_h["sent"])
                 recv_h = exchange(pl_h)
-                st, pl_t, _ = phase_compute(st, batch, ~is_head, k2)
-                st = phase_apply(st, recv_h, is_head)
-                st = phase_apply(st, exchange(pl_t), ~is_head)
+                st, pl_t, _ = phase_compute(st, batch, ~is_head, k2,
+                                            state.step)
+                sent_phases.append(pl_t["sent"])
+                st = phase_apply(st, recv_h)
+                st = phase_apply(st, exchange(pl_t))
             elif dcfg.mode == "gauss-seidel" and w > 1:
-                st, f0 = phase(st, batch, is_head, k1)
-                st, _ = phase(st, batch, ~is_head, k2)
+                st, f0 = phase(st, is_head, k1)
+                st, _ = phase(st, ~is_head, k2)
             else:
-                st, f0 = phase(st, batch, all_on, k1)
-            (theta, hat, hat_l, hat_r, lam_l, lam_r, radius, bits,
-             mu, nu, t) = st
+                st, f0 = phase(st, all_on, k1)
+            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
 
             # damped dual update (eq. 18) from reconstructed hats; both ends
-            # of each edge apply the same increment, keeping duals in sync.
+            # of each edge apply the same increment, keeping duals in sync:
+            # lam_e += a*rho*(hat_head - hat_tail), which the head computes
+            # as +(own - nbr) and the tail as -(own - nbr).
             scale = g.alpha * g.rho
-            lam_r = jax.tree.map(
-                lambda l, a, b: l + scale * _bmask(has_r, l)
-                * (a.astype(l.dtype) - b.astype(l.dtype)), lam_r, hat, hat_r)
-            lam_l = jax.tree.map(
-                lambda l, a, b: l + scale * _bmask(has_l, l)
-                * (a.astype(l.dtype) - b.astype(l.dtype)), lam_l, hat_l, hat)
+            new_lam = []
+            for c in range(ports):
+                coef = pmask[:, c] * sign  # (W,) f32: +-1 on live ports
+                new_lam.append(jax.tree.map(
+                    lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
+                    * (a.astype(l.dtype) - b.astype(l.dtype)),
+                    lam_nbr[c], hat, hat_nbr[c]))
+            lam_nbr = tuple(new_lam)
 
-            resid = jnp.sqrt(sum(jax.tree.leaves(jax.tree.map(
-                lambda a, b: jnp.sum(_bmask(has_r, a)
-                                     * (a.astype(jnp.float32)
-                                        - b.astype(jnp.float32)) ** 2),
-                hat, hat_r))) + 0.0)
+            # consensus violation, each edge counted once (from its head)
+            resid_sq = jnp.zeros(())
+            for c in range(ports):
+                m = port_on[c] & is_head
+                resid_sq = resid_sq + sum(jax.tree.leaves(jax.tree.map(
+                    lambda a, b: jnp.sum(_bmask(m, a)
+                                         * (a.astype(jnp.float32)
+                                            - b.astype(jnp.float32)) ** 2),
+                    hat, hat_nbr[c])))
+            sent_total = sum(jnp.sum(s.astype(jnp.float32))
+                             for s in sent_phases)
             metrics = {
                 "loss": jnp.mean(f0),
-                "consensus_resid": resid,
+                "consensus_resid": jnp.sqrt(resid_sq),
                 "radius_mean": jnp.mean(radius),
                 "bits_mean": jnp.mean(bits.astype(jnp.float32)),
+                # every worker is transmit-eligible exactly once per round
+                "skip_rate": 1.0 - sent_total / w,
                 "wire_bits_per_round": jnp.asarray(
-                    self.wire_bits_per_round(theta), jnp.float32),
+                    self.wire_bits_per_round(
+                        theta, sent_phases if cc is not None else None),
+                    jnp.float32),
             }
             new_state = DistState(
-                theta=theta, theta_hat=hat, hat_left=hat_l, hat_right=hat_r,
-                lam_left=lam_l, lam_right=lam_r, radius=radius, bits=bits,
+                theta=theta, theta_hat=hat, hat_nbr=hat_nbr,
+                lam_nbr=lam_nbr, radius=radius, bits=bits,
                 opt_mu=mu, opt_nu=nu, opt_t=t, key=key, step=state.step + 1)
             return new_state, metrics
 
@@ -763,18 +869,30 @@ class QGADMMTrainer:
             return d_pad
         return 4 * d_pad
 
-    def wire_bits_per_round(self, theta) -> int:
-        """Chain traffic per train step, matching the bytes on the wire.
+    def wire_bits_per_round(self, theta, sent_phases=None):
+        """Graph traffic per train step, matching the bytes on the wire.
 
-        Bills what the ppermute exchanges actually move: per phase (2 in
-        gauss-seidel, 1 in jacobi / overlap still performs both phases'
-        exchanges) and per direction, each of the W-1 chain links carries one
-        wire-buffer row (wire_row_bytes: packing + group padding included)
-        plus the quantizer sideband (R: one f32 in global mode, one per
-        tensor in per_tensor mode; b: one i32).  tests cross-check this
-        against the constructed payload buffers and core.comm_model."""
+        Without censoring (sent_phases=None) this bills what the ppermute
+        exchanges actually move — a static int: per phase (2 in
+        gauss-seidel, 1 in jacobi; overlap still performs both phases'
+        exchanges) and per direction, each of the topology's E edges carries
+        one wire-buffer row (wire_row_bytes: packing + group padding
+        included) plus the quantizer sideband (R: one f32 in global mode,
+        one per tensor in per_tensor mode; b: one i32).  For the chain
+        E = W-1, the original accounting.  tests cross-check this against
+        the constructed payload buffers and core.comm_model.
+
+        With censoring, `sent_phases` is the list of per-phase (W,) transmit
+        masks and the result is a traced scalar modelling the censored
+        protocol: every directed edge always carries the 1-bit censor flag
+        (censor.FLAG_BITS), and a direction's payload moves only when its
+        source worker transmitted — a worker that is phase-inactive or
+        censored is silent.  Directed payloads with source w per phase =
+        deg(w) when sent[w], so the payload term is per_link *
+        sum_w sent[w]*deg[w]."""
         w = self.dcfg.num_workers
-        if w <= 1:
+        n_edges = self.topo.num_edges
+        if n_edges == 0:
             return 0
         leaves = jax.tree.leaves(theta)
         d = sum(_leaf_sizes(leaves))
@@ -785,6 +903,13 @@ class QGADMMTrainer:
             sideband = 32 * n_r + 32  # radius f32(s) + bits i32
         else:
             sideband = 0
-        links = w - 1
-        n_phases = 2 if self.dcfg.mode == "gauss-seidel" else 1
-        return n_phases * 2 * links * (row_bits + sideband)
+        per_link = row_bits + sideband
+        if sent_phases is None:
+            n_phases = 2 if self.dcfg.mode == "gauss-seidel" else 1
+            return n_phases * 2 * n_edges * per_link
+        deg = jnp.asarray(self.topo.degree, jnp.float32)
+        total = jnp.zeros(())
+        for sent in sent_phases:
+            total = (total + 2 * n_edges * censor_mod.FLAG_BITS
+                     + per_link * jnp.sum(sent.astype(jnp.float32) * deg))
+        return total

@@ -20,8 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.censor import CensorConfig
 from repro.core.gadmm import GADMMConfig
 from repro.core.quantizer import QuantizerConfig
+from repro.core.topology import TOPOLOGY_KINDS
 from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
 from repro.dist.serve import Server, cache_specs, serve_view
 from repro.launch import hlo_stats
@@ -122,7 +124,9 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                  xent: str = "gather", attn_remat: bool = False,
                  uneven: bool = False, pack: bool | None = None,
                  bits: int = 8, seq_shard: bool = False,
-                 wire_impl: str = "jnp", reduced: bool = False):
+                 wire_impl: str = "jnp", reduced: bool = False,
+                 topology: str = "chain",
+                 censor: CensorConfig | None = None):
     cfg = registry.get_config(
         arch, smoke=reduced, compute_dtype=jnp.bfloat16,
         param_dtype=jnp.float32, xent_mode=xent, attn_scan_remat=attn_remat,
@@ -140,7 +144,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                           qcfg=QuantizerConfig(bits=bits), alpha=0.01),
         local_iters=local_iters, microbatches=microbatches, mode=mode,
         state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
-        seq_shard=seq_shard, wire_impl=wire_impl)
+        seq_shard=seq_shard, wire_impl=wire_impl, topology=topology,
+        censor=censor)
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
     state_structs = jax.eval_shape(
         functools.partial(init_state,
@@ -157,7 +162,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
     return _report(compiled, wmesh, cfg, shape_name, arch,
                    dict(mode=mode, workers=w, quantize=quantize,
                         t_lower=t_lower, t_compile=t_compile,
-                        reduced=reduced, wire_impl=wire_impl),
+                        reduced=reduced, wire_impl=wire_impl,
+                        topology=topology, censor=censor is not None),
                    verbose=verbose)
 
 
@@ -302,6 +308,14 @@ def main(argv=None):
     ap.add_argument("--wire-impl", default="jnp",
                     choices=["jnp", "pallas", "pallas_compiled"],
                     help="fused wire-path codec (dist.qgadmm wire_impl)")
+    ap.add_argument("--topology", default="chain", choices=list(TOPOLOGY_KINDS),
+                    help="worker graph for the train pairs (ring needs even "
+                         "workers, torus2d needs workers %% 4 == 0)")
+    ap.add_argument("--censor", action="store_true",
+                    help="enable CQ-GGADMM censored transmissions "
+                         "(--censor-tau/--censor-xi thresholds)")
+    ap.add_argument("--censor-tau", type=float, default=0.05)
+    ap.add_argument("--censor-xi", type=float, default=0.9)
     ap.add_argument("--reduced", action="store_true",
                     help="smoke configs on 16-device meshes: records the "
                          "full 33-pair matrix on CPU (committed artifacts)")
@@ -336,7 +350,11 @@ def main(argv=None):
                                  uneven=args.uneven, pack=args.pack,
                                  bits=args.bits, seq_shard=args.seq_shard,
                                  wire_impl=args.wire_impl,
-                                 reduced=args.reduced)
+                                 reduced=args.reduced,
+                                 topology=args.topology,
+                                 censor=(CensorConfig(tau=args.censor_tau,
+                                                      xi=args.censor_xi)
+                                         if args.censor else None))
             else:
                 r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
                                  windowed_cache=args.windowed_cache,

@@ -12,6 +12,8 @@ import sys
 
 
 def main(argv=None):
+    from repro.core.topology import TOPOLOGY_KINDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--smoke", action="store_true",
@@ -29,6 +31,14 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mode", default="gauss-seidel",
                     choices=["gauss-seidel", "jacobi"])
+    ap.add_argument("--topology", default="chain",
+                    choices=list(TOPOLOGY_KINDS),
+                    help="worker graph (ring: even workers; torus2d: "
+                         "workers %% 4 == 0)")
+    ap.add_argument("--censor", action="store_true",
+                    help="CQ-GGADMM censored transmissions")
+    ap.add_argument("--censor-tau", type=float, default=0.05)
+    ap.add_argument("--censor-xi", type=float, default=0.9)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
@@ -42,6 +52,7 @@ def main(argv=None):
     import numpy as np
     from jax.sharding import Mesh
 
+    from repro.core.censor import CensorConfig
     from repro.core.gadmm import GADMMConfig
     from repro.core.quantizer import QuantizerConfig
     from repro.data.pipeline import ExtraInputs, LMShardLoader
@@ -68,7 +79,10 @@ def main(argv=None):
         num_workers=args.workers,
         gadmm=GADMMConfig(rho=args.rho, quantize=not args.no_quantize,
                           qcfg=QuantizerConfig(bits=args.bits), alpha=0.01),
-        local_iters=args.local_iters, local_lr=args.lr, mode=args.mode)
+        local_iters=args.local_iters, local_lr=args.lr, mode=args.mode,
+        topology=args.topology,
+        censor=(CensorConfig(tau=args.censor_tau, xi=args.censor_xi)
+                if args.censor else None))
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
 
     loader = LMShardLoader(args.workers, args.per_worker_batch, args.seq,
@@ -107,9 +121,13 @@ def main(argv=None):
             is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
         state, metrics = step_fn(state, batch)
         if (step + 1) % args.log_every == 0 or step == start:
+            extra = (f" skip={float(metrics['skip_rate']):.2f} "
+                     f"wire_bits={float(metrics['wire_bits_per_round']):.3g}"
+                     if args.censor else "")
             print(f"step {step + 1}: loss={float(metrics['loss']):.4f} "
                   f"resid={float(metrics['consensus_resid']):.4f} "
-                  f"R={float(metrics['radius_mean']):.5f} "
+                  f"R={float(metrics['radius_mean']):.5f}"
+                  f"{extra} "
                   f"({(time.time() - t0) / (step - start + 1):.2f}s/step)")
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt_dir, step + 1, state)

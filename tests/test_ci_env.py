@@ -1,0 +1,43 @@
+"""CI environment guard: property suites must RUN in CI, not silently skip.
+
+The three hypothesis-based modules (test_quantizer / test_comm_model /
+test_moe) guard their import with ``pytest.importorskip("hypothesis")`` so
+that bare local checkouts still collect.  In CI that skip is a silent hole:
+requirements-dev.txt installs hypothesis, but nothing ever failed when the
+install regressed and the property suites quietly stopped executing.  The
+workflow now exports REPRO_CI=1 on every test step, and under that flag a
+missing hypothesis is a hard FAILURE here (and in the property modules
+themselves, which import hypothesis unconditionally when REPRO_CI=1).
+"""
+import importlib.util
+import os
+
+import pytest
+
+
+def _ci() -> bool:
+    return os.environ.get("REPRO_CI") == "1"
+
+
+def test_hypothesis_present_in_ci():
+    """REPRO_CI=1 promises the full property suites; hypothesis being
+    uninstallable there must fail loudly instead of skipping 3 modules."""
+    if not _ci():
+        pytest.skip("not a CI environment (REPRO_CI unset)")
+    assert importlib.util.find_spec("hypothesis") is not None, (
+        "REPRO_CI=1 but hypothesis is not installed: the property suites in "
+        "test_quantizer.py / test_comm_model.py / test_moe.py would "
+        "silently skip.  Install requirements-dev.txt in the CI test job.")
+
+
+def test_property_modules_hard_fail_in_ci_without_hypothesis():
+    """The property modules themselves must use the REPRO_CI-aware guard —
+    plain importorskip would keep skipping even when the flag is set."""
+    here = os.path.dirname(__file__)
+    for name in ("test_quantizer.py", "test_comm_model.py", "test_moe.py"):
+        with open(os.path.join(here, name)) as f:
+            src = f.read()
+        assert "REPRO_CI" in src, (
+            f"{name} must hard-import hypothesis when REPRO_CI=1 instead of "
+            "unconditionally calling pytest.importorskip (see the guard "
+            "block at the top of the other property modules)")

@@ -1,0 +1,136 @@
+"""Topology API contracts: builders, 2-coloring, Koenig edge coloring into
+ppermute-able matchings, and the broadcast_dist topology dispatch
+(regression: it silently assumed chain ordering)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("topo_fn,n", [
+    (T.chain_topology, 7), (T.chain_topology, 2),
+    (T.ring_topology, 8), (T.ring_topology, 2),
+    (lambda n: T.star_topology(n, hub=3), 9),
+    (lambda n: T.torus2d_topology(4, 4), 16),
+    (lambda n: T.torus2d_topology(2, 4), 8),
+    (lambda n: T.bipartite_topology(
+        6, [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5), (1, 4)]), 6),
+])
+def test_topology_invariants(topo_fn, n):
+    topo = topo_fn(n)
+    assert topo.n == n
+    # 2-coloring: every edge joins a head (color 0) and a tail, edges are
+    # canonically oriented head -> tail
+    if topo.num_edges:
+        assert (topo.color[topo.edges[:, 0]] == 0).all()
+        assert (topo.color[topo.edges[:, 1]] == 1).all()
+    # Koenig edge coloring: exactly max-degree colors, every color class a
+    # matching, every edge in exactly one class
+    assert topo.num_ports == (int(topo.degree.max()) if topo.num_edges else 0)
+    seen = set()
+    for m in topo.matchings():
+        flat = m.ravel().tolist()
+        assert len(flat) == len(set(flat)), "color class is not a matching"
+        for u, v in m:
+            seen.add((min(u, v), max(u, v)))
+    assert seen == {(min(u, v), max(u, v)) for u, v in topo.edges}
+    # neighbors() and port table agree
+    for i in range(n):
+        nbrs = set(topo.neighbors(i).tolist())
+        assert len(nbrs) == topo.degree[i]
+        for u, v in topo.edges:
+            if u == i:
+                assert v in nbrs
+            if v == i:
+                assert u in nbrs
+
+
+def test_rejects_non_bipartite_and_disconnected():
+    with pytest.raises(ValueError, match="not bipartite"):
+        T.bipartite_topology(3, [(0, 1), (1, 2), (0, 2)])
+    with pytest.raises(ValueError, match="not connected"):
+        T.bipartite_topology(4, [(0, 1)])
+    with pytest.raises(AssertionError):
+        T.ring_topology(5)  # odd cycle
+
+
+def test_star_hub_is_single_head():
+    topo = T.star_topology(10, hub=4)
+    assert topo.color[4] == 0
+    assert topo.head_mask.sum() == 1
+    assert topo.degree[4] == 9
+    assert (np.delete(topo.degree, 4) == 1).all()
+
+
+def test_build_topology_dispatch():
+    assert T.build_topology("chain", 5).kind == "chain"
+    assert T.build_topology("ring", 6).kind == "ring"
+    assert T.build_topology("star", 6).kind == "star"
+    t = T.build_topology("torus2d", 16)
+    assert t.kind == "torus2d" and (t.degree == 4).all()
+    got = T.build_topology(t, 16)
+    assert got is t
+    with pytest.raises(ValueError, match="unknown topology"):
+        T.build_topology("hypercube", 8)
+    with pytest.raises(AssertionError):
+        T.build_topology("torus2d", 6)  # no even x even factorization
+
+
+# ------------------------------------------------- broadcast_dist dispatch --
+def test_broadcast_dist_chain_matches_farther_neighbor():
+    """Legacy behavior, re-expressed per worker id: chain position i's
+    transmit distance is the farther of its two hop distances."""
+    p = T.random_placement(20, seed=3)
+    bd = p.broadcast_dist()
+    d = p.chain_hop_dist
+    expect = np.empty(20)
+    expect[0] = d[0]
+    expect[-1] = d[-1]
+    expect[1:-1] = np.maximum(d[:-1], d[1:])
+    # new API is worker-id ordered; chain[j] sits at chain position j
+    np.testing.assert_allclose(bd[p.chain], expect)
+
+
+def test_broadcast_dist_star_hub_uses_farthest_leaf():
+    """Regression (satellite): the old implementation assumed chain ordering;
+    a star's PS-like hub must bill the distance to its FARTHEST leaf, and
+    each leaf exactly its distance to the hub."""
+    p = T.random_placement(12, seed=0, topology="star")
+    hub = int(np.flatnonzero(p.topology.head_mask)[0])
+    assert hub == p.ps_index  # the PS-like min-sum-distance worker
+    bd = p.broadcast_dist()
+    dists = np.linalg.norm(p.positions - p.positions[hub], axis=1)
+    assert bd[hub] == pytest.approx(dists.max())
+    for i in range(12):
+        if i != hub:
+            assert bd[i] == pytest.approx(dists[i])
+
+
+def test_broadcast_dist_ring_uses_both_cycle_neighbors():
+    p = T.random_placement(10, seed=1, topology="ring")
+    bd = p.broadcast_dist()
+    topo = p.topology
+    for i in range(10):
+        nbrs = topo.neighbors(i)
+        assert len(nbrs) == 2  # a cycle
+        expect = max(np.linalg.norm(p.positions[j] - p.positions[i])
+                     for j in nbrs)
+        assert bd[i] == pytest.approx(expect)
+
+
+def test_round_energy_topology_censoring_reduces_energy():
+    """comm_model: censored workers transmit only the flag bit, so the round
+    energy drops strictly; the star hub's share reflects its farthest
+    leaf."""
+    from repro.core import comm_model as cm
+
+    p = T.random_placement(12, seed=0, topology="star")
+    radio = cm.RadioConfig(n_workers=12)
+    bits = 4 * 512 + 64
+    e_full = cm.round_energy_topology(p, bits, radio)
+    sent = np.ones(12, bool)
+    sent[::2] = False
+    e_cens = cm.round_energy_topology(p, bits, radio, sent=sent)
+    e_none = cm.round_energy_topology(p, bits, radio,
+                                      sent=np.zeros(12, bool))
+    assert 0 < e_none < e_cens < e_full

@@ -1,8 +1,10 @@
 """Fused wire-path contracts of the distributed trainer.
 
 Trainer-level parity (wire_impl='jnp' vs 'pallas' bit-identical through a
-whole train step), the zero-size-leaf regression, and the wire-accounting ==
-bytes-on-the-wire invariant (cross-checked against core.comm_model).
+whole train step — including censored transmissions and non-chain
+topologies), the zero-size-leaf regression, and the wire-accounting ==
+bytes-on-the-wire invariant (cross-checked against core.comm_model), with
+the censored accounting checked against its closed form.
 """
 import jax
 import jax.numpy as jnp
@@ -11,6 +13,7 @@ import pytest
 from jax.sharding import Mesh
 
 from repro.core import comm_model as cm
+from repro.core.censor import FLAG_BITS, CensorConfig
 from repro.core.gadmm import GADMMConfig
 from repro.core.quantizer import QuantizerConfig
 from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
@@ -171,6 +174,117 @@ def test_jit_train_step_parity_jnp_vs_pallas_sharded():
     assert "DONE" in r.stdout
 
 
+@pytest.mark.parametrize("topology", ["chain", "ring", "star", "torus2d"])
+@pytest.mark.parametrize("censored", [False, True])
+def test_trainer_parity_topologies_and_censor(topology, censored):
+    """wire_impl='pallas' stays bit-identical to 'jnp' on every generalized
+    topology, with and without censored transmissions — including the
+    censor-flag sideband (skip_rate) and the data-dependent wire accounting."""
+    cen = CensorConfig(tau=0.5, xi=0.95) if censored else None
+    tr_j, st_j, batch = _setup(topology=topology, censor=cen,
+                               wire_impl="jnp")
+    tr_p, st_p, _ = _setup(topology=topology, censor=cen,
+                           wire_impl="pallas")
+    st_j, m_j = _run(tr_j, st_j, batch, steps=4)
+    st_p, m_p = _run(tr_p, st_p, batch, steps=4)
+    for field in st_j._fields:
+        for a, b in zip(jax.tree.leaves(getattr(st_j, field)),
+                        jax.tree.leaves(getattr(st_p, field))):
+            np.testing.assert_array_equal(
+                np.asarray(jnp.asarray(a, jnp.float32)),
+                np.asarray(jnp.asarray(b, jnp.float32)),
+                err_msg=f"{topology} censored={censored} field {field}")
+    for k in ("loss", "skip_rate", "wire_bits_per_round"):
+        assert float(m_j[k]) == float(m_p[k]), (topology, censored, k)
+    if censored:
+        # by step 4 the toy problem's updates are below tau*xi^k: the flag
+        # sideband is genuinely exercised
+        assert float(m_j["skip_rate"]) > 0.0
+
+
+def test_unsharded_reference_vs_jit_train_step_censored():
+    """The unsharded reference and the sharded jit_train_step agree on a
+    censored non-chain topology: the censor-flag sideband (skip_rate) and
+    the billed wire bits are IDENTICAL every step, float state agrees to
+    partitioned-reduction tolerance (GSPMD reassociates the local matmul
+    reductions, so the Adam moments differ in the last ulp)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.launch.mesh import factor_mesh
+        from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+        from repro.core.censor import CensorConfig
+        from repro.core.gadmm import GADMMConfig
+        from repro.core.quantizer import QuantizerConfig
+
+        class MixedModel:
+            @staticmethod
+            def init(key, cfg):
+                k1, k2, k3 = jax.random.split(key, 3)
+                return {
+                    "wa": jax.random.normal(k1, (8, 4), jnp.float32),
+                    "wb": (0.1 * jax.random.normal(k2, (4, 6))
+                           ).astype(jnp.bfloat16),
+                    "bias": jax.random.normal(k3, (6,), jnp.float32),
+                }
+
+            @staticmethod
+            def loss_fn(params, batch, cfg):
+                h = batch["x"] @ params["wa"]
+                h = h @ params["wb"].astype(jnp.float32) + params["bias"]
+                return jnp.mean((h.sum(-1) - batch["y"]) ** 2)
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ("data", "model"))
+        wmesh = factor_mesh(mesh, num_workers=4)
+        batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8)),
+                 "y": jax.random.normal(jax.random.PRNGKey(2), (4, 8))}
+
+        for topology in ("ring", "star"):
+            dcfg = DistConfig(num_workers=4, topology=topology,
+                              censor=CensorConfig(tau=0.05, xi=0.9),
+                              gadmm=GADMMConfig(rho=0.5, quantize=True,
+                                                qcfg=QuantizerConfig(bits=4),
+                                                alpha=0.01),
+                              local_iters=2, local_lr=1e-2)
+            tr = QGADMMTrainer(MixedModel, None, dcfg, wmesh)
+            st_u = init_state(lambda k: MixedModel.init(k, None),
+                              jax.random.PRNGKey(0), dcfg)
+            st_s, b = tr.place(st_u, batch)
+            step_s = tr.jit_train_step(st_s, b)
+            step_u = jax.jit(tr.make_train_step())
+            for it in range(4):
+                st_s, m_s = step_s(st_s, b)
+                st_u, m_u = step_u(st_u, batch)
+                # censor-flag sideband + billed bits: bit-identical
+                assert float(m_s["skip_rate"]) == float(m_u["skip_rate"])
+                assert (float(m_s["wire_bits_per_round"])
+                        == float(m_u["wire_bits_per_round"]))
+                for f in st_s._fields:
+                    for a, c in zip(jax.tree.leaves(getattr(st_s, f)),
+                                    jax.tree.leaves(getattr(st_u, f))):
+                        a = np.asarray(jnp.asarray(a, jnp.float32))
+                        c = np.asarray(jnp.asarray(c, jnp.float32))
+                        np.testing.assert_allclose(
+                            a, c, rtol=2e-2, atol=1e-4,
+                            err_msg=f"{topology} step {it} field {f}")
+            print("OK", topology)
+        print("DONE")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "DONE" in r.stdout
+
+
 def test_zero_size_leaf_regression():
     """A pytree containing a (0,) leaf must train in both the quantized and
     the full-precision (metrics-radius) branch of phase()."""
@@ -237,6 +351,38 @@ def test_wire_accounting_matches_actual_payload(pack_wire, quantize,
     # the metric reports the same number
     _, metrics = _run(tr, state, batch, steps=1)
     assert int(metrics["wire_bits_per_round"]) == expected
+
+
+@pytest.mark.parametrize("topology", ["chain", "ring"])
+def test_censored_wire_accounting_closed_form(topology):
+    """The censored wire_bits_per_round metric matches its closed form at
+    both extremes: with a vanishing threshold every ACTIVE worker transmits
+    (flags + sum_w active*deg payload rows per phase), with a huge one the
+    round costs exactly the flag bits (2E per phase)."""
+    tiny = CensorConfig(tau=1e-20, xi=0.9)    # transmits whenever hats move
+    huge = CensorConfig(tau=1e9, xi=0.999999)  # censors everything
+    for cen, expect_kind in ((tiny, "all"), (huge, "none")):
+        tr, state, batch = _setup(topology=topology, censor=cen)
+        topo = tr.topo
+        d = sum(int(np.prod(l.shape[1:]))
+                for l in jax.tree.leaves(state.theta))
+        per_link = 8 * tr.wire_row_bytes(d) + 32 + 32
+        _, metrics = _run(tr, state, batch, steps=1)
+        e = topo.num_edges
+        heads = topo.head_mask
+        deg = topo.degree
+        if expect_kind == "all":
+            payload = (int(deg[heads].sum()) + int(deg[~heads].sum()))
+            expected = 2 * (2 * e * FLAG_BITS) + per_link * payload
+            assert float(metrics["skip_rate"]) == 0.0
+        else:
+            expected = 2 * (2 * e * FLAG_BITS)
+            assert float(metrics["skip_rate"]) == 1.0
+        assert int(metrics["wire_bits_per_round"]) == expected, (
+            topology, expect_kind)
+        # and the uncensored baseline of the same trainer is the static form
+        assert (tr.wire_bits_per_round(state.theta)
+                == 2 * 2 * e * per_link)
 
 
 def test_wire_accounting_cross_check_comm_model():
