@@ -95,10 +95,10 @@ def run(n_workers=10, iters=40, bits=8, rho=1.0, quick=False,
     ]:
         accs, bpr = fn()
         hit = np.nonzero(accs >= target_acc)[0]
-        r = int(hit[0]) + 1 if len(hit) else -1
+        r = float(hit[0]) + 1.0 if len(hit) else float("inf")
         rows.append(dict(alg=name, final_acc=float(accs[-1]),
                          rounds_to_target=r,
-                         bits_to_target=r * bpr if r > 0 else np.inf,
+                         bits_to_target=r * bpr,   # miss -> inf flows
                          bits_per_round=bpr))
     return rows
 

@@ -81,8 +81,8 @@ def run(n_workers=50, iters=600, rho=24.0, bits=2, seed=0, quick=False):
         else:
             up = (bits_per_round[name] - 32 * d) / n_workers
             e_round = cm.round_energy_ps(up, placement.ps_dist, 32 * d, radio)
-        total_bits = r * bits_per_round[name] if r > 0 else np.inf
-        total_e = r * e_round if r > 0 else np.inf
+        total_bits = r * bits_per_round[name]   # inf flows through a miss
+        total_e = r * e_round
         rows.append(dict(alg=name, rounds_to_1e4=r,
                          bits_per_round=bits_per_round[name],
                          total_bits=total_bits, total_energy_J=total_e,

@@ -38,7 +38,7 @@ def run(worker_counts=(10, 20, 50), iters=400, rho=24.0, bits=4, quick=False):
             r = rounds_to(losses, target)
             bpr = gadmm.bits_per_round(cfg, n, d)
             rows.append(dict(alg=name, n=n, rounds=r,
-                             total_bits=r * bpr if r > 0 else np.inf))
+                             total_bits=r * bpr))  # miss -> inf flows
     return rows
 
 

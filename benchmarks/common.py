@@ -44,9 +44,12 @@ def run_gadmm_curve(xs, ys, cfg: gadmm.GADMMConfig, iters: int, theta_star):
     return np.asarray(losses), st
 
 
-def rounds_to(losses: np.ndarray, target: float) -> int:
+def rounds_to(losses: np.ndarray, target: float) -> float:
+    """First 1-based round with loss <= target; misses are inf (so derived
+    totals like rounds * energy flow through as inf without sentinel
+    checks — aggregate with np.isfinite)."""
     hit = np.nonzero(losses <= target)[0]
-    return int(hit[0]) + 1 if len(hit) else -1
+    return float(hit[0]) + 1.0 if len(hit) else float("inf")
 
 
 def energy_curves(placement, radio: cm.RadioConfig, d: int, iters: int,

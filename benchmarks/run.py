@@ -32,6 +32,7 @@ def main(argv=None) -> None:
         "compute_time": bench_compute_time.main,  # Fig. 8
         "kernels": bench_kernels.main,
         "wire": bench_wire.main,              # fused wire path (this repo)
+        "sim": bench_energy_cdf.main_sim,     # event-driven runtime (repro.sim)
         "jacobi": bench_jacobi.main,          # beyond-paper variant
     }
     only = set(args.only.split(",")) if args.only else None

@@ -3,9 +3,10 @@ plus the CQ-GGADMM extensions (generalized bipartite topologies + censored
 transmissions)."""
 from .censor import CensorConfig
 from .gadmm import (ChainState, GADMMConfig, GraphState, Quadratic,
-                    bits_per_round, gadmm_step, graph_bits_per_round,
-                    graph_init_state, graph_step, init_state,
-                    make_graph_quadratic, make_quadratic)
+                    bits_per_round, dequantize_rows, gadmm_step,
+                    graph_bits_per_round, graph_consts, graph_dual_update,
+                    graph_init_state, graph_phase, graph_step, init_state,
+                    make_graph_quadratic, make_quadratic, quantize_rows)
 from .quantizer import (QuantizerConfig, QuantState, dequantize, payload_bits,
                         quantize)
 from .sgadmm import SGADMMConfig, SGADMMTrainer
@@ -17,8 +18,10 @@ __all__ = [
     "ChainState", "GADMMConfig", "Quadratic", "bits_per_round", "gadmm_step",
     "init_state", "make_quadratic", "QuantizerConfig", "QuantState",
     "dequantize", "payload_bits", "quantize", "SGADMMConfig", "SGADMMTrainer",
-    "CensorConfig", "GraphState", "graph_bits_per_round", "graph_init_state",
-    "graph_step", "make_graph_quadratic", "Placement", "Topology",
+    "CensorConfig", "GraphState", "dequantize_rows", "graph_bits_per_round",
+    "graph_consts", "graph_dual_update", "graph_init_state", "graph_phase",
+    "graph_step", "make_graph_quadratic", "quantize_rows", "Placement",
+    "Topology",
     "build_topology", "chain_topology", "random_placement", "ring_topology",
     "star_topology", "torus2d_topology",
 ]

@@ -105,9 +105,33 @@ def _solve_all(q: Quadratic, lam: Array, hat: Array, rho: float) -> Array:
     return jnp.einsum("nde,ne->nd", q.minv, rhs)
 
 
-def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
-                   radius_prev: Array, bits_prev: Array, cfg: GADMMConfig):
-    """Stochastically quantize each active worker's row; return new hats/R/b."""
+def dequantize_rows(qlev: Array, hat_prev: Array, radius: Array,
+                    bits: Array) -> Array:
+    """Receiver-side reconstruction of per-row payloads (eq. 13).
+
+    The EXACT arithmetic quantize_rows applies on the sender — the sim's
+    event-driven receivers (repro.sim.worker) reconstruct through this
+    function, so both ends of a link stay bit-identical by construction.
+    qlev: (..., d) levels, hat_prev: (..., d), radius/bits: (...,) per row.
+    """
+    levels = 2.0 ** bits.astype(jnp.float32) - 1.0
+    safe_r = jnp.maximum(radius, 1e-30)[..., None]
+    step = 2.0 * safe_r / levels[..., None]
+    hat_new = hat_prev + step * qlev - radius[..., None]
+    return jnp.where(radius[..., None] > 0, hat_new, hat_prev)
+
+
+def quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
+                  radius_prev: Array, bits_prev: Array, cfg: GADMMConfig):
+    """Stochastically quantize each active worker's row.
+
+    Returns (hat_new, radius, bits, qlev) — qlev is the (N, d) wire payload
+    (quantization levels); hat_new is its reconstruction via dequantize_rows
+    (sender == receiver bit-sync).  Row n of every output depends ONLY on
+    row n of the inputs (plus the shared key), so a single worker's
+    transmission is reproducible in isolation — the property the
+    event-driven simulator's actors (repro.sim) rely on.
+    """
     n, d = theta.shape
     diff = theta - hat_prev
     r_new = jnp.max(jnp.abs(diff), axis=1)  # (N,) per-worker inf-norm
@@ -123,8 +147,7 @@ def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
     p = c - low
     u = jax.random.uniform(key, (n, d))
     qlev = jnp.clip(low + (u < p), 0.0, levels[:, None])
-    hat_new = hat_prev + step * qlev - r_new[:, None]
-    hat_new = jnp.where(r_new[:, None] > 0, hat_new, hat_prev)
+    hat_new = dequantize_rows(qlev, hat_prev, r_new, b_new)
     if cfg.topk_frac < 1.0:
         # sparsify: exactly the k largest |delta| coords are transmitted (ties
         # broken by index, matching the billed k of bits_per_round); the rest
@@ -139,7 +162,16 @@ def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
     hat = jnp.where(active[:, None], hat_new, hat_prev)
     return (hat,
             jnp.where(active, r_new, radius_prev),
-            jnp.where(active, b_new, bits_prev))
+            jnp.where(active, b_new, bits_prev),
+            qlev)
+
+
+def _quantize_rows(theta: Array, hat_prev: Array, active: Array, key: Array,
+                   radius_prev: Array, bits_prev: Array, cfg: GADMMConfig):
+    """quantize_rows without the wire payload (chain/sgadmm call sites)."""
+    hat, radius, bits, _ = quantize_rows(theta, hat_prev, active, key,
+                                         radius_prev, bits_prev, cfg)
+    return hat, radius, bits
 
 
 def gadmm_step(state: ChainState, q: Quadratic, cfg: GADMMConfig) -> ChainState:
@@ -288,7 +320,7 @@ def make_graph_quadratic(xs: Array, ys: Array, rho: float, topo) -> Quadratic:
     return Quadratic(xtx=xtx, xty=xty, minv=minv)
 
 
-def _graph_consts(topo):
+def graph_consts(topo):
     """Static jnp views of the topology used inside the jitted step."""
     import numpy as np
 
@@ -307,6 +339,9 @@ def _graph_consts(topo):
     )
 
 
+_graph_consts = graph_consts  # pre-PR-4 name
+
+
 def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
                      tc) -> Array:
     """Closed-form local argmin for every worker on the graph.
@@ -323,6 +358,52 @@ def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
     return jnp.einsum("nde,ne->nd", q.minv, rhs)
 
 
+def graph_phase(theta: Array, hat: Array, lam: Array, radius: Array,
+                bits: Array, active: Array, key: Array, *, q: Quadratic,
+                cfg: GADMMConfig, tc, step: Array, censor=None):
+    """One phase of the graph sweep: the `active` group solves its local
+    problems, quantizes, and (optionally) censors.
+
+    Returns (theta, hat, radius, bits, sent, qlev).  Row n of every output
+    depends only on row n of the inputs, n's neighbor rows of `hat`
+    (through the adjacency-masked proximal term), and n's incident rows of
+    `lam` — so a single worker can replay its own row exactly from a local
+    view that has garbage in all unrelated rows.  This is the contract the
+    event-driven simulator's actors (repro.sim.worker.GraphActor) build on:
+    the lockstep graph_step below and the message-by-message simulator run
+    the SAME function and are bit-identical under an ideal network.
+    """
+    from .censor import transmit_mask
+
+    theta_all = _graph_solve_all(q, lam, hat, cfg.rho, tc)
+    theta = jnp.where(active[:, None], theta_all, theta)
+    hat_new, r_new, b_new, qlev = quantize_rows(
+        theta, hat, active, key, radius, bits, cfg)
+    if censor is not None:
+        sent = active & transmit_mask(hat_new, hat, censor, step)
+        hat_new = jnp.where(sent[:, None], hat_new, hat)
+        r_new = jnp.where(sent, r_new, radius)
+        b_new = jnp.where(sent, b_new, bits)
+    else:
+        sent = active
+    return theta, hat_new, r_new, b_new, sent, qlev
+
+
+def graph_dual_update(lam: Array, hat: Array, cfg: GADMMConfig, tc,
+                      edge_mask: Array | None = None) -> Array:
+    """Per-edge damped dual update (eq. 18): lam_e += a*rho*(h_head - h_tail).
+
+    `edge_mask` (E,) freezes edges when 0 — the simulator uses it to stop
+    updating duals on links whose far endpoint dropped out.
+    """
+    if not lam.shape[0]:
+        return lam
+    resid = hat[tc["e_head"]] - hat[tc["e_tail"]]
+    if edge_mask is not None:
+        resid = resid * edge_mask[:, None]
+    return lam + cfg.alpha * cfg.rho * resid
+
+
 def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
                censor=None) -> GraphState:
     """One censored GGADMM/CQ-GGADMM iteration on an arbitrary bipartite
@@ -334,35 +415,17 @@ def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
     worker itself) keep the previous hat, and the round is recorded in
     state.sent for wire accounting (graph_bits_per_round).
     """
-    from .censor import transmit_mask
-
-    tc = _graph_consts(topo)
+    tc = graph_consts(topo)
     is_head = tc["head"]
     key, k_h, k_t = jax.random.split(state.key, 3)
 
-    def phase(theta, hat, lam, radius, bits, active, k):
-        theta_all = _graph_solve_all(q, lam, hat, cfg.rho, tc)
-        theta = jnp.where(active[:, None], theta_all, theta)
-        hat_new, r_new, b_new = _quantize_rows(
-            theta, hat, active, k, radius, bits, cfg)
-        if censor is not None:
-            sent = active & transmit_mask(hat_new, hat, censor, state.step)
-            hat_new = jnp.where(sent[:, None], hat_new, hat)
-            r_new = jnp.where(sent, r_new, radius)
-            b_new = jnp.where(sent, b_new, bits)
-        else:
-            sent = active
-        return theta, hat_new, lam, r_new, b_new, sent
-
-    st = (state.theta, state.theta_hat, state.lam, state.radius, state.bits)
-    *st, sent_h = phase(*st, is_head, k_h)
-    *st, sent_t = phase(*st, ~is_head, k_t)
-    theta, hat, lam, radius, bits = st
-
-    # per-edge dual update (damped, eq. 18 form): lam_e += a*rho*(h_h - h_t)
-    if topo.num_edges:
-        resid = hat[tc["e_head"]] - hat[tc["e_tail"]]
-        lam = lam + cfg.alpha * cfg.rho * resid
+    theta, hat, radius, bits, sent_h, _ = graph_phase(
+        state.theta, state.theta_hat, state.lam, state.radius, state.bits,
+        is_head, k_h, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor)
+    theta, hat, radius, bits, sent_t, _ = graph_phase(
+        theta, hat, state.lam, radius, bits,
+        ~is_head, k_t, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor)
+    lam = graph_dual_update(state.lam, hat, cfg, tc)
 
     return GraphState(theta=theta, theta_hat=hat, lam=lam, radius=radius,
                       bits=bits, sent=sent_h | sent_t, key=key,

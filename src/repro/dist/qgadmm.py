@@ -268,6 +268,12 @@ class QGADMMTrainer:
         self.dcfg = dcfg
         self.mesh = worker_mesh
         self.topo: Topology = build_topology(dcfg.topology, dcfg.num_workers)
+        pmask_np = self.topo.port >= 0                   # (W, C) static
+        self.pmask = jnp.asarray(pmask_np, jnp.float32)
+        self.port_on = [jnp.asarray(pmask_np[:, c])
+                        for c in range(self.topo.num_ports)]
+        self.is_head = jnp.asarray(self.topo.head_mask)
+        self.sign = jnp.where(self.is_head, 1.0, -1.0).astype(jnp.float32)
 
     # ------------------------------------------------------------ specs ----
     def batch_specs(self, batch):
@@ -669,6 +675,122 @@ class QGADMMTrainer:
         return jax.jit(self._build_step(sharded=True),
                        in_shardings=(ss, bs), out_shardings=(ss, None))
 
+    def phase_compute(self, st, batch, active, key, step_idx,
+                      sharded: bool = False):
+        """Local Adam + quantize (+ censor) for the active workers;
+        returns the updated state and the wire payload (exchange NOT yet
+        applied).  payload['sent'] is the per-worker transmit flag — the
+        1-bit censor sideband that rides every link.
+
+        Worker row w of every output depends only on row w of the inputs
+        (plus the shared uniform-draw key), so a single worker can replay
+        its own row from a local view whose other rows are garbage — the
+        contract repro.sim.worker.TrainerActor builds on."""
+        g = self.dcfg.gadmm
+        cc = self.dcfg.censor
+        w = self.dcfg.num_workers
+        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+        new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
+            theta, mu, nu, t, batch, lam_nbr, hat_nbr, self.pmask, self.sign)
+        theta = _twhere(active, new_theta, theta)
+        mu = _twhere(active, new_mu, mu)
+        nu = _twhere(active, new_nu, nu)
+        t = jnp.where(active, new_t, t)
+
+        if g.quantize:
+            q_wire, hat_new, r_new, b_new = self._quantize_all(
+                theta, hat, bits, radius, key, sharded)
+            if cc is not None:
+                # CQ-GGADMM censoring: commit + transmit only when the
+                # quantized model moved past the decaying threshold.
+                # hat_new is the committed (per-leaf-cast) value, so the
+                # mask is identical for every wire_impl and on both the
+                # unsharded and sharded paths.
+                sent = active & censor_mod.transmit_mask(
+                    hat_new, hat, cc, step_idx)
+            else:
+                sent = active
+            hat = _twhere(sent, hat_new, hat)
+            radius = jnp.where(_bmask(sent, r_new), r_new, radius)
+            bits = jnp.where(sent, b_new, bits)
+            payload = {"wire": self._finish_wire(q_wire),
+                       "radius": r_new, "bits": b_new, "sent": sent}
+        else:
+            # full-precision GADMM: track the would-be radius for metrics,
+            # then "transmit" theta itself (hat == theta).  Censoring
+            # applies identically (this is C-GGADMM).
+            per_leaf_r = self._per_leaf_radius(
+                jax.tree.leaves(theta), jax.tree.leaves(hat))  # (W, L)
+            if cc is not None:
+                sent = active & censor_mod.transmit_mask(
+                    theta, hat, cc, step_idx)
+            else:
+                sent = active
+            hat = _twhere(sent, theta, hat)
+            r_new = (jnp.max(per_leaf_r, axis=1)
+                     if radius.ndim == 1 and per_leaf_r.shape[1]
+                     else (per_leaf_r if radius.ndim > 1
+                           else jnp.zeros((w,), jnp.float32)))
+            radius = jnp.where(_bmask(sent, r_new), r_new, radius)
+            payload = {"wire": self._flatten_wire(
+                jax.tree.leaves(hat), jnp.float32), "sent": sent}
+
+        return (theta, hat, hat_nbr, lam_nbr, radius, bits,
+                mu, nu, t), payload, f0
+
+    def phase_apply(self, st, recv):
+        """Fold the exchanged payloads into the per-port neighbor hats.
+
+        recv[c]['sent'][w] is the exchanged censor flag: did w's color-c
+        partner transmit?  Censored (or phase-inactive) partners leave
+        the stored hat untouched — exactly what their own rolled-back
+        state holds, preserving bit-sync."""
+        g = self.dcfg.gadmm
+        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+        templates = jax.tree.leaves(theta)
+        treedef = jax.tree.structure(theta)
+        d = sum(_leaf_sizes(templates))
+        new_nbr = []
+        for c in range(self.topo.num_ports):
+            from_c = recv[c]
+            got = from_c["sent"] & self.port_on[c]
+            if g.quantize:
+                qc = self._strip_wire(from_c["wire"], d)
+                dec = self._dequantize_all(
+                    qc, hat_nbr[c], from_c["radius"], from_c["bits"])
+                new_nbr.append(_twhere(got, dec, hat_nbr[c]))
+            else:
+                ls = self._unflatten_wire(from_c["wire"], templates)
+                cast = jax.tree.unflatten(
+                    treedef, [l.astype(r.dtype) for l, r in
+                              zip(ls, jax.tree.leaves(hat_nbr[c]))])
+                new_nbr.append(_twhere(got, cast, hat_nbr[c]))
+        return (theta, hat, tuple(new_nbr), lam_nbr, radius, bits,
+                mu, nu, t)
+
+    def dual_update(self, st, port_mask=None):
+        """Damped dual update (eq. 18) from reconstructed hats; both ends
+        of each edge apply the same increment, keeping duals in sync:
+        lam_e += a*rho*(hat_head - hat_tail), which the head computes
+        as +(own - nbr) and the tail as -(own - nbr).
+
+        `port_mask` (W, C) overrides the topology's port mask — the
+        simulator zeroes ports whose far endpoint dropped, freezing those
+        duals instead of integrating a stale residual forever."""
+        g = self.dcfg.gadmm
+        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+        pm = self.pmask if port_mask is None else port_mask
+        scale = g.alpha * g.rho
+        new_lam = []
+        for c in range(self.topo.num_ports):
+            coef = pm[:, c] * self.sign  # (W,) f32: +-1 on live ports
+            new_lam.append(jax.tree.map(
+                lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
+                * (a.astype(l.dtype) - b.astype(l.dtype)),
+                lam_nbr[c], hat, hat_nbr[c]))
+        return (theta, hat, hat_nbr, tuple(new_lam), radius, bits,
+                mu, nu, t)
+
     def _build_step(self, sharded: bool):
         dcfg = self.dcfg
         g = dcfg.gadmm
@@ -680,96 +802,12 @@ class QGADMMTrainer:
             assert self.mesh.shape["worker"] == w, (
                 f"mesh worker axis {self.mesh.shape['worker']} != "
                 f"num_workers {w}")
-        pmask_np = topo.port >= 0                       # (W, C) static
-        pmask = jnp.asarray(pmask_np, jnp.float32)
-        port_on = [jnp.asarray(pmask_np[:, c]) for c in range(ports)]
-        is_head = jnp.asarray(topo.head_mask)
-        sign = jnp.where(is_head, 1.0, -1.0).astype(jnp.float32)
+        is_head = self.is_head
+        port_on = self.port_on
         all_on = jnp.ones((w,), bool)
         exchange = (self._make_exchange(sharded) if topo.num_edges else None)
-
-        def phase_compute(st, batch, active, key, step_idx):
-            """Local Adam + quantize (+ censor) for the active workers;
-            returns the updated state and the wire payload (exchange NOT yet
-            applied).  payload['sent'] is the per-worker transmit flag — the
-            1-bit censor sideband that rides every link."""
-            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-            new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
-                theta, mu, nu, t, batch, lam_nbr, hat_nbr, pmask, sign)
-            theta = _twhere(active, new_theta, theta)
-            mu = _twhere(active, new_mu, mu)
-            nu = _twhere(active, new_nu, nu)
-            t = jnp.where(active, new_t, t)
-
-            if g.quantize:
-                q_wire, hat_new, r_new, b_new = self._quantize_all(
-                    theta, hat, bits, radius, key, sharded)
-                if cc is not None:
-                    # CQ-GGADMM censoring: commit + transmit only when the
-                    # quantized model moved past the decaying threshold.
-                    # hat_new is the committed (per-leaf-cast) value, so the
-                    # mask is identical for every wire_impl and on both the
-                    # unsharded and sharded paths.
-                    sent = active & censor_mod.transmit_mask(
-                        hat_new, hat, cc, step_idx)
-                else:
-                    sent = active
-                hat = _twhere(sent, hat_new, hat)
-                radius = jnp.where(_bmask(sent, r_new), r_new, radius)
-                bits = jnp.where(sent, b_new, bits)
-                payload = {"wire": self._finish_wire(q_wire),
-                           "radius": r_new, "bits": b_new, "sent": sent}
-            else:
-                # full-precision GADMM: track the would-be radius for metrics,
-                # then "transmit" theta itself (hat == theta).  Censoring
-                # applies identically (this is C-GGADMM).
-                per_leaf_r = self._per_leaf_radius(
-                    jax.tree.leaves(theta), jax.tree.leaves(hat))  # (W, L)
-                if cc is not None:
-                    sent = active & censor_mod.transmit_mask(
-                        theta, hat, cc, step_idx)
-                else:
-                    sent = active
-                hat = _twhere(sent, theta, hat)
-                r_new = (jnp.max(per_leaf_r, axis=1)
-                         if radius.ndim == 1 and per_leaf_r.shape[1]
-                         else (per_leaf_r if radius.ndim > 1
-                               else jnp.zeros((w,), jnp.float32)))
-                radius = jnp.where(_bmask(sent, r_new), r_new, radius)
-                payload = {"wire": self._flatten_wire(
-                    jax.tree.leaves(hat), jnp.float32), "sent": sent}
-
-            return (theta, hat, hat_nbr, lam_nbr, radius, bits,
-                    mu, nu, t), payload, f0
-
-        def phase_apply(st, recv):
-            """Fold the exchanged payloads into the per-port neighbor hats.
-
-            recv[c]['sent'][w] is the exchanged censor flag: did w's color-c
-            partner transmit?  Censored (or phase-inactive) partners leave
-            the stored hat untouched — exactly what their own rolled-back
-            state holds, preserving bit-sync."""
-            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-            templates = jax.tree.leaves(theta)
-            treedef = jax.tree.structure(theta)
-            d = sum(_leaf_sizes(templates))
-            new_nbr = []
-            for c in range(ports):
-                from_c = recv[c]
-                got = from_c["sent"] & port_on[c]
-                if g.quantize:
-                    qc = self._strip_wire(from_c["wire"], d)
-                    dec = self._dequantize_all(
-                        qc, hat_nbr[c], from_c["radius"], from_c["bits"])
-                    new_nbr.append(_twhere(got, dec, hat_nbr[c]))
-                else:
-                    ls = self._unflatten_wire(from_c["wire"], templates)
-                    cast = jax.tree.unflatten(
-                        treedef, [l.astype(r.dtype) for l, r in
-                                  zip(ls, jax.tree.leaves(hat_nbr[c]))])
-                    new_nbr.append(_twhere(got, cast, hat_nbr[c]))
-            return (theta, hat, tuple(new_nbr), lam_nbr, radius, bits,
-                    mu, nu, t)
+        phase_compute = functools.partial(self.phase_compute, sharded=sharded)
+        phase_apply = self.phase_apply
 
         def step(state: DistState, batch):
             key, k1, k2 = jax.random.split(state.key, 3)
@@ -807,21 +845,8 @@ class QGADMMTrainer:
                 st, _ = phase(st, ~is_head, k2)
             else:
                 st, f0 = phase(st, all_on, k1)
+            st = self.dual_update(st)
             (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-
-            # damped dual update (eq. 18) from reconstructed hats; both ends
-            # of each edge apply the same increment, keeping duals in sync:
-            # lam_e += a*rho*(hat_head - hat_tail), which the head computes
-            # as +(own - nbr) and the tail as -(own - nbr).
-            scale = g.alpha * g.rho
-            new_lam = []
-            for c in range(ports):
-                coef = pmask[:, c] * sign  # (W,) f32: +-1 on live ports
-                new_lam.append(jax.tree.map(
-                    lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
-                    * (a.astype(l.dtype) - b.astype(l.dtype)),
-                    lam_nbr[c], hat, hat_nbr[c]))
-            lam_nbr = tuple(new_lam)
 
             # consensus violation, each edge counted once (from its head)
             resid_sq = jnp.zeros(())

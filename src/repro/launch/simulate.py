@@ -1,0 +1,175 @@
+"""Event-driven network simulation CLI for Q-GADMM (repro.sim).
+
+Plays Q-GADMM out message-by-message over a modeled radio network and
+reports wall-clock/Joules-to-target — the quantities the paper's headline
+figures are about — under scenarios the lockstep benchmarks cannot
+express: packet loss with retransmits, per-link latency/jitter,
+heterogeneous compute, stragglers, worker drops, bounded-staleness
+asynchrony.
+
+  PYTHONPATH=src python -m repro.launch.simulate --topology ring --workers 8
+  PYTHONPATH=src python -m repro.launch.simulate --topology star \\
+      --censor --loss 0.05 --straggler 1:10 --bandwidth 2e6
+  PYTHONPATH=src python -m repro.launch.simulate --async-staleness 2 \\
+      --drop 2:40 --transport unicast --out sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_model as cm
+from repro.core import gadmm
+from repro.core.censor import CensorConfig
+from repro.core.quantizer import QuantizerConfig
+from repro.core.topology import TOPOLOGY_KINDS
+from repro.data.synthetic import regression_shards
+from repro.sim import (ComputeModel, FaultPlan, NetworkConfig, SimConfig,
+                       simulate)
+
+
+def _parse_pairs(items, what: str) -> dict[int, float]:
+    out = {}
+    for item in items or []:
+        try:
+            k, v = item.split(":")
+            out[int(k)] = float(v)
+        except ValueError:
+            raise SystemExit(f"bad --{what} spec {item!r}; expected "
+                             f"WORKER:VALUE (e.g. 3:8)")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="discrete-event Q-GADMM network simulation")
+    ap.add_argument("--topology", default="chain", choices=list(TOPOLOGY_KINDS))
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=6)
+    ap.add_argument("--samples", type=int, default=2000)
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--rho", type=float, default=24.0)
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--no-quantize", action="store_true",
+                    help="full-precision GADMM wire (32*d bits/transmission)")
+    ap.add_argument("--censor", action="store_true",
+                    help="CQ-GGADMM censored transmissions")
+    ap.add_argument("--censor-tau", type=float, default=0.05)
+    ap.add_argument("--censor-xi", type=float, default=0.9)
+    ap.add_argument("--bandwidth", type=float, default=2e6,
+                    help="total system bandwidth in Hz (paper: 2 MHz)")
+    ap.add_argument("--loss", type=float, default=0.0,
+                    help="i.i.d. per-attempt packet loss probability")
+    ap.add_argument("--latency", type=float, default=0.0,
+                    help="per-link propagation latency (s)")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="uniform delivery jitter bound (s)")
+    ap.add_argument("--transport", default="broadcast",
+                    choices=["broadcast", "unicast"],
+                    help="broadcast = paper radio; unicast = serialized "
+                         "per-link sends (the trainer's port exchanges)")
+    ap.add_argument("--compute", type=float, default=1e-3,
+                    help="mean local compute time per phase (s)")
+    ap.add_argument("--compute-jitter", type=float, default=0.0,
+                    help="lognormal sigma of per-phase compute jitter")
+    ap.add_argument("--straggler", action="append", default=None,
+                    metavar="W:FACTOR",
+                    help="slow worker W down by FACTOR (repeatable)")
+    ap.add_argument("--drop", action="append", default=None,
+                    metavar="W:ROUND",
+                    help="worker W goes silent before round ROUND "
+                         "(repeatable)")
+    ap.add_argument("--async-staleness", type=int, default=0,
+                    help="bounded staleness S; 0 = barriered lockstep")
+    ap.add_argument("--target", type=float, default=1e-4,
+                    help="relative objective gap defining *-to-target")
+    ap.add_argument("--fail-above", type=float, default=None, metavar="GAP",
+                    help="exit nonzero unless the final relative objective "
+                         "gap is <= GAP (CI convergence gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--x64", action="store_true", default=True)
+    ap.add_argument("--no-x64", dest="x64", action="store_false")
+    ap.add_argument("--out", default=None, help="write summary JSON here")
+    args = ap.parse_args(argv)
+
+    if args.x64:
+        jax.config.update("jax_enable_x64", True)
+    n, d = args.workers, args.dim
+    xs, ys, _ = regression_shards(n_workers=n, samples=args.samples, d=d,
+                                  seed=args.seed)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    gcfg = gadmm.GADMMConfig(rho=args.rho, quantize=not args.no_quantize,
+                             qcfg=QuantizerConfig(bits=args.bits))
+    censor = (CensorConfig(tau=args.censor_tau, xi=args.censor_xi)
+              if args.censor else None)
+    scfg = SimConfig(
+        topology=args.topology, rounds=args.rounds,
+        staleness=args.async_staleness, seed=args.seed,
+        radio=cm.RadioConfig(total_bandwidth_hz=args.bandwidth,
+                             n_workers=n),
+        network=NetworkConfig(latency_s=args.latency, jitter_s=args.jitter,
+                              loss_prob=args.loss,
+                              detection_delay_s=max(args.latency, 1e-3),
+                              transport=args.transport),
+        compute=ComputeModel(base_s=args.compute,
+                             jitter_sigma=args.compute_jitter,
+                             straggler=_parse_pairs(args.straggler,
+                                                    "straggler")),
+        faults=FaultPlan(drop_round={k: int(v) for k, v in
+                                     _parse_pairs(args.drop, "drop").items()}))
+    res = simulate(xs, ys, gcfg, scfg, censor=censor)
+    tt = res.to_rel_target(args.target)
+    s = res.summary()
+    skip = (1.0 - float(np.mean([st["sent"].mean() for st in res.states]))
+            if res.states else 0.0)
+
+    print(f"== repro.sim: {args.topology} x {n} workers, {args.rounds} "
+          f"rounds, staleness {args.async_staleness} ==")
+    print(f"  channel: {args.transport}, {args.bandwidth/1e6:g} MHz, "
+          f"loss {args.loss:g}, latency {args.latency:g}s"
+          + (", censored" if censor else ""))
+    print(f"  events {s['events']}  makespan {s['makespan_s']:.4g}s  "
+          f"energy {s['total_energy_j']:.4g}J  "
+          f"wire {s['total_bits']:.4g}b  retx {s['retransmissions']}")
+    print(f"  rounds completed: min {min(s['rounds_completed'])} "
+          f"max {max(s['rounds_completed'])}"
+          + (f"  dropped: {sorted(s['dropped'])}" if s["dropped"] else ""))
+    if res.states:
+        print(f"  final relative gap: {res.final_rel_gap():.3e}  "
+              f"censor skip rate: {skip:.2f}")
+    print(f"  to {args.target:g} rel target: round {tt['round']:g}, "
+          f"t={tt['time_s']:.4g}s, E={tt['energy_j']:.4g}J")
+    per = s["per_worker_energy_j"]
+    worst = int(np.argmax(per))
+    print(f"  per-worker J: mean {np.mean(per):.3g}, "
+          f"max {per[worst]:.3g} (worker {worst})")
+    if args.out:
+        s.update(topology=args.topology, workers=n,
+                 staleness=args.async_staleness, loss=args.loss,
+                 bandwidth_hz=args.bandwidth, transport=args.transport,
+                 censored=censor is not None,
+                 final_rel_gap=(res.final_rel_gap()
+                                if len(res.losses) else None),
+                 to_target=tt)
+        with open(args.out, "w") as f:
+            json.dump(s, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    if args.fail_above is not None:
+        if not res.states:
+            print("--fail-above needs recorded states", file=sys.stderr)
+            return 2
+        gap = res.final_rel_gap()
+        if not np.isfinite(gap) or gap > args.fail_above:
+            print(f"FAIL: final relative gap {gap:.3e} > "
+                  f"{args.fail_above:g}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

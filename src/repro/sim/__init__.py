@@ -1,0 +1,36 @@
+"""repro.sim — deterministic discrete-event simulator for Q-GADMM.
+
+Everything else in this repo executes Q-GADMM in idealized lockstep rounds
+and reconstructs network cost after the fact from core.comm_model closed
+forms.  This subsystem *plays the algorithm out* message-by-message over a
+modeled network: every worker is an actor running the real per-worker
+Q-GADMM update (the exact row math of core.gadmm.graph_phase /
+dist.qgadmm.QGADMMTrainer.phase_compute — no reimplementation), and every
+transmission is an explicit message traversing a per-link channel with
+latency, bandwidth, jitter, i.i.d. loss + retransmit, priced through
+core.comm_model.RadioConfig.  Heterogeneous compute, stragglers, worker
+drops, and bounded-staleness asynchrony become first-class scenarios.
+
+Keystone contract (locked by tests/test_sim.py): under an ideal network —
+zero latency, lossless, homogeneous compute, staleness 0 — the simulator's
+per-round worker states are bit-identical to core.gadmm.graph_step (and,
+in trainer mode, to QGADMMTrainer.make_train_step()), for every topology
+and with censoring on or off.
+
+Modules:
+  engine   — deterministic event loop / clock (repeatable tie-breaking)
+  network  — channel + fault models (latency/jitter/loss/stragglers/drops)
+  worker   — GraphActor / TrainerActor: the per-worker protocol machines
+  timeline — per-worker wall-clock + Joules accountant, *-to-target traces
+  runner   — SimConfig / simulate() / simulate_trainer() entry points
+"""
+from .engine import Engine, SimLivenessError
+from .network import ComputeModel, FaultPlan, Network, NetworkConfig
+from .runner import SimConfig, SimResult, simulate, simulate_trainer
+from .timeline import Timeline
+
+__all__ = [
+    "ComputeModel", "Engine", "FaultPlan", "Network", "NetworkConfig",
+    "SimConfig", "SimLivenessError", "SimResult", "Timeline", "simulate",
+    "simulate_trainer",
+]

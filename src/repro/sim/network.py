@@ -1,0 +1,225 @@
+"""Channel + fault-injection models for the event-driven Q-GADMM runtime.
+
+One worker broadcast = one radio transmission priced through
+core.comm_model.tx_energy with the paper's Sec. V-A parameters
+(RadioConfig): slot length tau, noise PSD, and a per-transmitter bandwidth
+share equal to total_bandwidth / |transmitting color group| — exactly the
+closed-form rule of comm_model.round_energy_topology, so an ideal-network
+simulation reproduces the closed-form round energy to the Joule
+(tests/test_sim.py asserts it).
+
+On top of that closed-form core, the channel adds what the closed forms
+cannot express:
+
+  * per-link propagation latency + uniform delivery jitter,
+  * i.i.d. per-attempt packet loss with bounded retransmit — every retry
+    is a *unicast* to the neighbor that missed it, billed at that link's
+    distance and occupying the sender for another slot,
+  * ``transport='unicast'``: per-neighbor serialized transmissions
+    instead of a single broadcast slot — this models the distributed
+    trainer's C = max-degree sequential port exchanges (a star hub pays
+    deg = N-1 slots per phase, the measured hub-serialization number in
+    ROADMAP.md), while the default 'broadcast' models the paper's radio.
+  * heterogeneous compute-time distributions, straggler multipliers, and
+    scheduled worker drops (FaultPlan) with link-layer drop detection.
+
+Determinism: every stochastic choice is drawn from a stream keyed by the
+entity it belongs to — compute times per worker, loss/jitter per directed
+link — so results do not depend on event interleaving.  Deliveries on a
+directed link are FIFO (a retransmitted round-k payload can never be
+overtaken by the round-k+1 payload), which the delta-coded quantizer
+requires for sender==receiver sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.core.comm_model import RadioConfig, tx_energy
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """Per-link channel model (shared by every link; distances differ)."""
+
+    latency_s: float = 0.0        # propagation latency per delivery
+    jitter_s: float = 0.0         # uniform [0, jitter_s) extra per delivery
+    loss_prob: float = 0.0        # i.i.d. per-attempt packet loss
+    max_retransmits: int = 100    # bounded: the link layer then declares
+                                  # the payload through (keeps delta-coded
+                                  # hats in sync and the event loop live)
+    detection_delay_s: float = 0.0  # peer-down notification delay
+    transport: str = "broadcast"  # 'broadcast' | 'unicast'
+
+    def __post_init__(self):
+        assert 0.0 <= self.loss_prob < 1.0, self.loss_prob
+        assert self.transport in ("broadcast", "unicast"), self.transport
+        assert self.max_retransmits >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Per-phase local computation time.
+
+    base_s:        homogeneous mean compute time per phase.
+    jitter_sigma:  lognormal sigma of a multiplicative per-(worker, phase)
+                   draw; 0 = deterministic.
+    straggler:     worker id -> multiplicative slowdown (e.g. {3: 10.0}).
+    """
+
+    base_s: float = 1e-3
+    jitter_sigma: float = 0.0
+    straggler: Mapping[int, float] = dataclasses.field(default_factory=dict)
+
+    def factor(self, worker: int) -> float:
+        return float(self.straggler.get(worker, 1.0))
+
+    def sample(self, worker: int, rng: np.random.Generator) -> float:
+        dt = self.base_s * self.factor(worker)
+        if self.jitter_sigma > 0.0:
+            dt *= float(rng.lognormal(0.0, self.jitter_sigma))
+        return dt
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Scheduled worker failures: worker id -> first round it does NOT
+    start (it completes rounds 0..r-1, then goes permanently silent)."""
+
+    drop_round: Mapping[int, int] = dataclasses.field(default_factory=dict)
+
+    def drops_at(self, worker: int) -> int | None:
+        r = self.drop_round.get(worker)
+        return None if r is None else int(r)
+
+
+class Network:
+    """The modeled medium between actors.
+
+    Actors are registered with `register`; `broadcast` puts one phase
+    payload on the air and schedules `on_message(msg)` on every live
+    neighbor, returning the time the sender's radio frees up.
+    """
+
+    def __init__(self, engine, topo, placement, radio: RadioConfig,
+                 ncfg: NetworkConfig, timeline, seed: int = 0) -> None:
+        self.engine = engine
+        self.topo = topo
+        self.radio = radio
+        self.ncfg = ncfg
+        self.timeline = timeline
+        self._actors: list[Any] = []
+        self._dist = self._distances(placement)
+        self._bcast_dist = placement.broadcast_dist()
+        heads = int(topo.head_mask.sum())
+        tails = topo.n - heads
+        self._group_size = np.where(topo.head_mask, max(heads, 1),
+                                    max(tails, 1))
+        self._link_rng: dict[tuple[int, int], np.random.Generator] = {
+            (int(u), int(v)): np.random.default_rng([seed, 7, int(u), int(v)])
+            for u, v in np.vstack([topo.edges, topo.edges[:, ::-1]])
+        } if topo.num_edges else {}
+        self._fifo_floor: dict[tuple[int, int], float] = {}
+
+    @staticmethod
+    def _distances(placement) -> np.ndarray:
+        pos = placement.positions
+        return np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
+
+    def register(self, actors) -> None:
+        self._actors = list(actors)
+
+    def bw_share(self, src: int) -> float:
+        """Bandwidth of one transmitter: the total band is shared within
+        the phase's transmitting color group (the head/tail alternation is
+        exactly the paper's 2*Btot/N rule on a balanced chain)."""
+        return self.radio.total_bandwidth_hz / float(self._group_size[src])
+
+    # ------------------------------------------------------------ sending --
+    def _tx(self, t: float, src: int, dst: int, bits: float, dist_m: float,
+            attempt: int) -> float:
+        e = tx_energy(bits, dist_m, self.bw_share(src), self.radio.slot_s,
+                      self.radio.noise_psd)
+        self.timeline.record_tx(t, src, dst, bits, e, self.radio.slot_s,
+                                attempt)
+        return e
+
+    def _deliver(self, src: int, dst: int, t_ready: float, msg) -> None:
+        """Schedule delivery with latency + jitter, FIFO per directed
+        link."""
+        rng = self._link_rng[(src, dst)]
+        jitter = (float(rng.uniform(0.0, self.ncfg.jitter_s))
+                  if self.ncfg.jitter_s > 0.0 else 0.0)
+        t = t_ready + self.ncfg.latency_s + jitter
+        key = (src, dst)
+        t = max(t, self._fifo_floor.get(key, 0.0))
+        self._fifo_floor[key] = t
+        actor = self._actors[dst]
+        self.engine.at(t, lambda: actor.on_message(msg))
+
+    def _attempts(self, src: int, dst: int) -> int:
+        """1 + number of retransmissions this delivery needs (bounded)."""
+        if self.ncfg.loss_prob <= 0.0:
+            return 1
+        rng = self._link_rng[(src, dst)]
+        a = 1
+        while (a <= self.ncfg.max_retransmits
+               and float(rng.uniform()) < self.ncfg.loss_prob):
+            a += 1
+        return a
+
+    def broadcast(self, src: int, bits: float, msg) -> float:
+        """Put one phase payload on the air; returns the sender's
+        radio-free time.
+
+        transport='broadcast': one slot covers all neighbors (energy at
+        the farthest-neighbor distance, the paper's power rule); each
+        neighbor whose copy is lost gets serialized unicast retransmits.
+        transport='unicast': deg(src) serialized per-link transmissions
+        (the trainer's sequential port exchanges), each with its own
+        loss/retransmit draws.
+        """
+        t0 = self.engine.now
+        slot = self.radio.slot_s
+        nbrs = [int(j) for j in self.topo.neighbors(src)]
+        if not nbrs:
+            return t0
+        t_busy = t0
+        if self.ncfg.transport == "broadcast":
+            self._tx(t0, src, -1, bits, float(self._bcast_dist[src]), 0)
+            t_busy = t0 + slot
+            late: list[tuple[int, int]] = []
+            for j in nbrs:
+                a = self._attempts(src, j)
+                if a == 1:
+                    self._deliver(src, j, t_busy, msg)
+                else:
+                    late.append((j, a))
+            # serialized unicast retransmissions, neighbor-id order
+            for j, a in late:
+                for k in range(a - 1):
+                    self._tx(t_busy, src, j, bits,
+                             float(self._dist[src, j]), k + 1)
+                    t_busy += slot
+                self._deliver(src, j, t_busy, msg)
+        else:
+            for j in nbrs:
+                a = self._attempts(src, j)
+                for k in range(a):
+                    self._tx(t_busy, src, j, bits,
+                             float(self._dist[src, j]), k)
+                    t_busy += slot
+                self._deliver(src, j, t_busy, msg)
+        return t_busy
+
+    # -------------------------------------------------------------- drops --
+    def announce_drop(self, src: int) -> None:
+        """Link-layer failure detection: neighbors learn (after
+        detection_delay_s) that `src` is gone and stop waiting on it."""
+        self.timeline.record_drop(src, self.engine.now)
+        for j in self.topo.neighbors(src):
+            actor = self._actors[int(j)]
+            self.engine.after(self.ncfg.detection_delay_s,
+                              lambda a=actor, s=src: a.on_peer_down(s))

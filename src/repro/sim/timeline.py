@@ -1,0 +1,131 @@
+"""Timeline/energy accountant for the event-driven runtime.
+
+Collects, as the simulation plays out:
+
+  * every transmission (time, source, bits, Joules, airtime) — priced by
+    sim.network through core.comm_model.tx_energy,
+  * every per-worker round completion (wall-clock time of worker w
+    finishing round k),
+  * per-round state snapshots (optional; the bit-parity tests and the
+    objective/loss traces are assembled from these).
+
+and derives the paper-facing summaries: per-worker wall-clock and Joules,
+cumulative-energy curves, and time/energy-to-target once the runner
+attaches an objective trace.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class TxRecord:
+    t: float
+    src: int
+    dst: int        # -1 = broadcast to all neighbors
+    bits: float
+    energy_j: float
+    airtime_s: float
+    attempt: int    # 0 = first transmission, >= 1 = retransmission
+
+
+class Timeline:
+    def __init__(self, n: int) -> None:
+        self.n = n
+        self.tx: list[TxRecord] = []
+        # round_done[w] = list of completion times, index = round
+        self.round_done: list[list[float]] = [[] for _ in range(n)]
+        self.snapshots: dict[int, dict[int, Any]] = {}  # round -> worker -> snap
+        self.dropped_at: dict[int, float] = {}
+
+    # ----------------------------------------------------------- recording --
+    def record_tx(self, t: float, src: int, dst: int, bits: float,
+                  energy_j: float, airtime_s: float, attempt: int) -> None:
+        self.tx.append(TxRecord(t, src, dst, bits, energy_j, airtime_s,
+                                attempt))
+
+    def record_round(self, worker: int, rnd: int, t: float) -> None:
+        done = self.round_done[worker]
+        assert rnd == len(done), (worker, rnd, len(done))
+        done.append(t)
+
+    def record_snapshot(self, worker: int, rnd: int, snap: Any) -> None:
+        self.snapshots.setdefault(rnd, {})[worker] = snap
+
+    def record_drop(self, worker: int, t: float) -> None:
+        self.dropped_at[worker] = t
+
+    # ------------------------------------------------------------- queries --
+    def total_energy_j(self) -> float:
+        return float(sum(r.energy_j for r in self.tx))
+
+    def total_bits(self) -> float:
+        return float(sum(r.bits for r in self.tx))
+
+    def retransmissions(self) -> int:
+        return sum(1 for r in self.tx if r.attempt > 0)
+
+    def per_worker_energy_j(self) -> list[float]:
+        out = [0.0] * self.n
+        for r in self.tx:
+            out[r.src] += r.energy_j
+        return out
+
+    def makespan_s(self) -> float:
+        ends = [d[-1] for d in self.round_done if d]
+        return max(ends) if ends else 0.0
+
+    def rounds_completed(self) -> list[int]:
+        return [len(d) for d in self.round_done]
+
+    def global_round_times(self) -> list[float]:
+        """t[k] = wall-clock at which EVERY non-dropped worker finished
+        round k (the barrier view of an async run; in barriered mode this
+        is just the slowest worker per round)."""
+        alive = [w for w in range(self.n) if w not in self.dropped_at]
+        counted = alive if alive else range(self.n)
+        k_max = min((len(self.round_done[w]) for w in counted), default=0)
+        return [max(self.round_done[w][k] for w in counted)
+                for k in range(k_max)]
+
+    def energy_until(self, t: float) -> float:
+        """Joules spent up to wall-clock t (transmissions are billed at
+        their start time)."""
+        return float(sum(r.energy_j for r in self.tx if r.t <= t))
+
+    def _cum_energy(self) -> tuple[list[float], list[float]]:
+        times, cum, acc = [], [], 0.0
+        for r in sorted(self.tx, key=lambda r: r.t):
+            acc += r.energy_j
+            times.append(r.t)
+            cum.append(acc)
+        return times, cum
+
+    def to_target(self, losses: list[float], target: float
+                  ) -> dict[str, float]:
+        """First global round whose objective gap <= target, with its
+        wall-clock time and the Joules spent until then.  Misses flow
+        through as inf (the convention the benchmarks aggregate on)."""
+        times = self.global_round_times()
+        tx_t, tx_cum = self._cum_energy()
+        for k, loss in enumerate(losses[: len(times)]):
+            if loss <= target:
+                t = times[k]
+                j = bisect.bisect_right(tx_t, t)
+                return {"round": float(k + 1), "time_s": t,
+                        "energy_j": tx_cum[j - 1] if j else 0.0}
+        return {"round": float("inf"), "time_s": float("inf"),
+                "energy_j": float("inf")}
+
+    def summary(self) -> dict:
+        return {
+            "total_energy_j": self.total_energy_j(),
+            "total_bits": self.total_bits(),
+            "retransmissions": self.retransmissions(),
+            "makespan_s": self.makespan_s(),
+            "rounds_completed": self.rounds_completed(),
+            "per_worker_energy_j": self.per_worker_energy_j(),
+            "dropped": dict(self.dropped_at),
+        }

@@ -1,0 +1,354 @@
+"""Q-GADMM actors for the event-driven runtime.
+
+Each worker is a small protocol state machine around the *real* per-worker
+update math — nothing numeric is reimplemented here:
+
+  * :class:`GraphActor` replays ``core.gadmm.graph_phase`` /
+    ``graph_dual_update`` (the CQ-GGADMM graph reference) on a local view,
+  * :class:`TrainerActor` replays ``dist.qgadmm.QGADMMTrainer``'s
+    ``phase_compute`` / ``phase_apply`` / ``dual_update`` methods (the
+    unsharded reference step of the distributed trainer).
+
+Local views.  Row n of every reference function depends only on row n of
+its inputs plus n's neighbor rows of the hat state (through 0/1-masked
+sums) — so an actor keeps a full-shaped *local view* whose own row and
+neighbor rows are maintained exactly (neighbor rows only ever change by
+applying received messages through the same reconstruction code the
+lockstep reference runs) while all unrelated rows are don't-care.  Under
+an ideal network this makes the actor's own row bit-identical to the
+lockstep implementation, which tests/test_sim.py asserts per round.
+
+Protocol (two-phase Gauss-Seidel, bounded staleness S = `staleness`):
+
+  * a head may start its round-k phase once every live neighbor's last
+    applied round >= k-1-S; a tail once every live head neighbor reached
+    round k-S (S=0 is the barriered schedule: tails consume the heads'
+    fresh round-k hats, exactly the lockstep sweep),
+  * after its phase the worker broadcasts one payload — quantized levels
+    + (R, b) sideband, or the 1-bit censor flag — through sim.network,
+  * the worker completes round k (per-edge dual update, snapshot, k+1)
+    once its own phase is done and every live neighbor's applied round
+    >= k-S.
+
+Messages on one directed link are applied strictly in round order (the
+channel is FIFO and the actor buffers anything early) because the
+quantizer is delta-coded: reconstruction of round k+1 requires the hat
+state after round k.  Dropped neighbors are detected via the network's
+peer-down notification; the actor stops waiting on them and freezes the
+shared edge's dual instead of integrating a stale residual forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Msg:
+    src: int
+    rnd: int
+    sent: bool          # False = censor flag only
+    body: dict[str, Any]
+    bits: float
+
+
+class BaseActor:
+    """Shared Gauss-Seidel protocol machine; numeric hooks in subclasses:
+
+    _phase(key) -> (sent: bool, body: dict, payload_bits: float)
+    _apply(j, msg) -> None           (fold a neighbor's payload in)
+    _dual_update() -> None
+    _snapshot() -> dict
+    """
+
+    def __init__(self, i, topo, *, engine, network, timeline, compute,
+                 rounds, staleness=0, drop_round=None, seed=0):
+        self.i = int(i)
+        self.topo = topo
+        self.engine = engine
+        self.network = network
+        self.timeline = timeline
+        self.compute = compute
+        self.rounds = int(rounds)
+        self.staleness = int(staleness)
+        self.drop_round = drop_round
+        self.is_head = bool(topo.head_mask[self.i])
+        self.neighbors = [int(j) for j in topo.neighbors(self.i)]
+        self.rng = np.random.default_rng([seed, 3, self.i])
+
+        self.rnd = 0
+        self.phase_done = False
+        self.computing = False
+        self.dropped = False
+        self.radio_busy = 0.0
+        self.nbr_round = {j: -1 for j in self.neighbors}
+        self.dead: set[int] = set()
+        self._early: dict[int, dict[int, Msg]] = {j: {} for j in self.neighbors}
+        self.sent_log: list[bool] = []
+
+    # ------------------------------------------------------------ schedule --
+    def start(self) -> None:
+        self._try_phase()
+
+    def _live(self):
+        return (j for j in self.neighbors if j not in self.dead)
+
+    def _phase_ready(self) -> bool:
+        need = self.rnd - 1 - self.staleness if self.is_head \
+            else self.rnd - self.staleness
+        return all(self.nbr_round[j] >= need for j in self._live())
+
+    def _complete_ready(self) -> bool:
+        need = self.rnd - self.staleness
+        return all(self.nbr_round[j] >= need for j in self._live())
+
+    def _try_phase(self) -> None:
+        if self.dropped or self.computing or self.phase_done \
+                or self.rnd >= self.rounds:
+            return
+        if self.drop_round is not None and self.rnd >= self.drop_round:
+            self.dropped = True
+            self.network.announce_drop(self.i)
+            return
+        if not self._phase_ready():
+            return
+        self.computing = True
+        t_start = max(self.engine.now, self.radio_busy)
+        dt = self.compute.sample(self.i, self.rng)
+        self.engine.at(t_start + dt, self._on_compute_done)
+
+    def _on_compute_done(self) -> None:
+        key = self._phase_key()
+        sent, body, bits = self._phase(key)
+        self.sent_log.append(bool(sent))
+        msg = Msg(src=self.i, rnd=self.rnd, sent=bool(sent), body=body,
+                  bits=float(bits))
+        self.radio_busy = self.network.broadcast(self.i, float(bits), msg)
+        self.computing = False
+        self.phase_done = True
+        self._try_complete()
+
+    def _try_complete(self) -> None:
+        if self.dropped or not self.phase_done or not self._complete_ready():
+            return
+        self._dual_update()
+        self.timeline.record_round(self.i, self.rnd, self.engine.now)
+        self.timeline.record_snapshot(self.i, self.rnd, self._snapshot())
+        self.rnd += 1
+        self.phase_done = False
+        self._try_phase()
+
+    # ------------------------------------------------------------ receiving --
+    def on_message(self, msg: Msg) -> None:
+        if self.dropped:
+            return
+        j = msg.src
+        # delta-coded payloads apply strictly in round order; the FIFO
+        # channel makes out-of-order arrival impossible, the buffer keeps
+        # the invariant explicit (and guards any future transport).
+        self._early[j][msg.rnd] = msg
+        while self.nbr_round[j] + 1 in self._early[j]:
+            m = self._early[j].pop(self.nbr_round[j] + 1)
+            if m.sent:
+                self._apply(j, m)
+            self.nbr_round[j] += 1
+        self._try_phase()
+        self._try_complete()
+
+    def on_peer_down(self, j: int) -> None:
+        if self.dropped or j in self.dead:
+            return
+        self.dead.add(int(j))
+        self._peer_down_hook(int(j))
+        self._try_phase()
+        self._try_complete()
+
+    # ---------------------------------------------------------------- hooks --
+    def _phase_key(self):
+        raise NotImplementedError
+
+    def _phase(self, key):
+        raise NotImplementedError
+
+    def _apply(self, j: int, msg: Msg) -> None:
+        raise NotImplementedError
+
+    def _dual_update(self) -> None:
+        raise NotImplementedError
+
+    def _snapshot(self) -> dict:
+        raise NotImplementedError
+
+    def _peer_down_hook(self, j: int) -> None:
+        pass
+
+
+class GraphActor(BaseActor):
+    """Actor running core.gadmm.graph_phase on a local view.
+
+    `fns` is the shared jitted function table built once by the runner
+    (sim.runner._graph_fns): phase / apply / dual — one compilation for
+    all N actors.
+    """
+
+    def __init__(self, i, topo, *, state0, fns, keys, cfg, payload_bits,
+                 flag_bits, **kw):
+        super().__init__(i, topo, **kw)
+        self.fns = fns
+        self.keys = keys          # (rounds, 2, key) beacon: [k][head?0:1]
+        self.cfg = cfg
+        self.payload_bits = float(payload_bits)
+        self.flag_bits = float(flag_bits)
+        self.theta = state0.theta
+        self.hat = state0.theta_hat
+        self.lam = state0.lam
+        self.radius = state0.radius
+        self.bits = state0.bits
+        self.active = jnp.asarray(topo.head_mask if self.is_head
+                                  else ~topo.head_mask)
+        self.edge_alive = np.ones((topo.num_edges,), np.float32)
+        self._edge_of = {}
+        for e, (h, t) in enumerate(topo.edges):
+            if int(h) == self.i:
+                self._edge_of[int(t)] = e
+            elif int(t) == self.i:
+                self._edge_of[int(h)] = e
+
+    def _phase_key(self):
+        return self.keys[self.rnd][0 if self.is_head else 1]
+
+    def _phase(self, key):
+        (self.theta, self.hat, self.radius, self.bits,
+         sent_i, qlev_i, hat_i, r_i, b_i) = self.fns["phase"](
+            self.theta, self.hat, self.lam, self.radius, self.bits,
+            self.active, key, jnp.asarray(self.rnd, jnp.int32), self.i)
+        if not bool(sent_i):
+            return False, {}, self.flag_bits
+        # The wire carries (qlev, R, b) — that is what payload_bits prices
+        # — and the receiver's dequantize_rows(qlev, hat_prev, R, b) is the
+        # same arithmetic that committed hat_i on the sender.  The message
+        # also transports the committed row itself: recomputing it in a
+        # separately jitted program is NOT guaranteed bit-stable (XLA may
+        # FMA-contract a*b+c differently per compilation), and the
+        # keystone contract locks the sim to the lockstep reference
+        # bit-for-bit.  tests/test_sim.py checks the codec roundtrip
+        # against the shipped row.
+        body = {"hat": hat_i, "qlev": qlev_i, "radius": r_i, "bits": b_i} \
+            if self.cfg.quantize else {"hat": hat_i}
+        return True, body, self.payload_bits
+
+    def _apply(self, j, msg):
+        self.hat = self.fns["apply"](self.hat, j, msg.body["hat"])
+
+    def _edge_mask(self) -> np.ndarray:
+        """1.0 on live incident edges whose neighbor hat is round-fresh.
+
+        Barriered (staleness 0) completion implies nbr_round[j] == rnd, so
+        the mask is all-ones there (bit-parity preserved; x*1.0 is exact).
+        In async mode a dual step is taken only when the edge has this
+        round's information — integrating a stale residual every local
+        round makes the per-endpoint dual copies drift apart and wrecks
+        the fixed point."""
+        mask = self.edge_alive.copy()
+        for j, e in self._edge_of.items():
+            if j not in self.dead and self.nbr_round[j] < self.rnd:
+                mask[e] = 0.0
+        return mask
+
+    def _dual_update(self):
+        self.lam = self.fns["dual"](self.lam, self.hat,
+                                    jnp.asarray(self._edge_mask()))
+
+    def _peer_down_hook(self, j):
+        e = self._edge_of.get(j)
+        if e is not None:
+            self.edge_alive[e] = 0.0
+
+    def _snapshot(self):
+        lam_rows = {self._edge_of[j]: np.asarray(self.lam[self._edge_of[j]])
+                    for j in self.neighbors
+                    if int(self.topo.edges[self._edge_of[j], 0]) == self.i}
+        return dict(theta=np.asarray(self.theta[self.i]),
+                    hat=np.asarray(self.hat[self.i]),
+                    radius=np.asarray(self.radius[self.i]),
+                    bits=np.asarray(self.bits[self.i]),
+                    sent=self.sent_log[-1], lam_rows=lam_rows)
+
+
+class TrainerActor(BaseActor):
+    """Actor replaying QGADMMTrainer's unsharded reference step pieces.
+
+    The local view is the trainer's full stacked 9-tuple state; `fns`
+    (sim.runner._trainer_fns) wraps the trainer's phase_compute /
+    phase_apply / dual_update methods, jitted once for all actors.
+    """
+
+    def __init__(self, i, topo, *, st0, batch, fns, keys, trainer,
+                 payload_bits, flag_bits, **kw):
+        super().__init__(i, topo, **kw)
+        self.st = st0
+        self.batch = batch
+        self.fns = fns
+        self.keys = keys
+        self.trainer = trainer
+        self.payload_bits = float(payload_bits)
+        self.flag_bits = float(flag_bits)
+        self.quantize = trainer.dcfg.gadmm.quantize
+        self.active = jnp.asarray(topo.head_mask if self.is_head
+                                  else ~topo.head_mask)
+        # port c of worker i <-> neighbor topo.port[i, c]
+        self._port_of = {int(p): c for c, p in enumerate(topo.port[self.i])
+                         if p >= 0}
+        self.port_alive = np.asarray(topo.port >= 0, np.float32)
+
+    def _phase_key(self):
+        return self.keys[self.rnd][0 if self.is_head else 1]
+
+    def _phase(self, key):
+        self.st, sent_i, hat_row, wire_i, r_i, b_i = self.fns["phase"](
+            self.st, self.batch, self.active, key,
+            jnp.asarray(self.rnd, jnp.int32), self.i)
+        if not bool(sent_i):
+            return False, {}, self.flag_bits
+        # wire_i/(R, b) are the billed wire content; hat_row is the
+        # committed reconstruction the receivers store (see GraphActor:
+        # cross-program recompute is not FMA-stable, and the trainer's
+        # in-program receiver path is bit-identical to the sender's commit
+        # — checked by the sim-vs-trainer parity suite).
+        body = {"hat": hat_row, "wire": wire_i}
+        if self.quantize:
+            body["radius"] = r_i
+            body["bits"] = b_i
+        return True, body, self.payload_bits
+
+    def _apply(self, j, msg):
+        self.st = self.fns["apply"](self.st, self._port_of[j], self.i,
+                                    msg.body["hat"])
+
+    def _dual_update(self):
+        # same fresh-edge gating as GraphActor._edge_mask (row i only; the
+        # other rows of the local view are don't-care)
+        mask = self.port_alive.copy()
+        for j, c in self._port_of.items():
+            if j not in self.dead and self.nbr_round[j] < self.rnd:
+                mask[self.i, c] = 0.0
+        self.st = self.fns["dual"](self.st, jnp.asarray(mask))
+
+    def _peer_down_hook(self, j):
+        self.port_alive = self.port_alive.copy()
+        self.port_alive[self.i, self._port_of[j]] = 0.0
+
+    def _snapshot(self):
+        import jax
+        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = self.st
+        row = lambda tree: jax.tree.map(
+            lambda a: np.asarray(a[self.i]), tree)
+        return dict(theta=row(theta), hat=row(hat),
+                    hat_nbr=tuple(row(h) for h in hat_nbr),
+                    lam_nbr=tuple(row(l) for l in lam_nbr),
+                    radius=np.asarray(radius[self.i]),
+                    bits=np.asarray(bits[self.i]),
+                    sent=self.sent_log[-1])
