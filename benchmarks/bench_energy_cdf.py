@@ -7,6 +7,7 @@ closed-form numbers in BENCH_sim.json (``main_sim`` / ``benchmarks.run
 --only sim``)."""
 from __future__ import annotations
 
+import dataclasses
 import json
 
 import numpy as np
@@ -134,8 +135,13 @@ def _sim_scenarios():
                 base.append(dict(topology=topology, bw_hz=bw, loss=loss))
     base.append(dict(topology="chain", bw_hz=2e6, loss=0.0,
                      straggler={1: 10.0}, tag="straggler"))
+    # the async dual integrates the round-(k-S) residual every round
+    # (sim.worker); the undamped update diverges at this rho, so the
+    # scenario carries the paper's damped alpha (same value the async
+    # convergence test in tests/test_sim.py pins)
     base.append(dict(topology="ring", bw_hz=2e6, loss=0.0,
-                     straggler={3: 8.0}, staleness=2, tag="async"))
+                     straggler={3: 8.0}, staleness=2, alpha=0.25,
+                     tag="async"))
     base.append(dict(topology="star", bw_hz=2e6, loss=0.0,
                      transport="unicast", tag="hub_serialization"))
     return base
@@ -175,7 +181,9 @@ def run_sim(quick=False, seed=0):
                                                    "broadcast")),
             compute=ComputeModel(base_s=1e-3,
                                  straggler=sc.get("straggler", {})))
-        res = simulate(xs, ys, cfg, scfg, placement=placement)
+        sc_cfg = dataclasses.replace(cfg, alpha=sc["alpha"]) \
+            if "alpha" in sc else cfg
+        res = simulate(xs, ys, sc_cfg, scfg, placement=placement)
         tt = res.to_rel_target(REL_TARGET)
         closed_round_j = cm.round_energy_topology(placement, payload_bits,
                                                   radio)

@@ -149,10 +149,84 @@ def run(d=4096, w=4, quick=False):
             steps=steps, skip_rate_mean=skip,
             censored_bits_total=cen_bits, baseline_bits_total=base_bits,
             bits_ratio=cen_bits / base_bits))
-    with open("BENCH_wire.json", "w") as f:
-        json.dump(records, f, indent=1)
-    rows.append(("bench_wire_json", 0, "wrote BENCH_wire.json"))
+    rows_l, records_l = _run_layouts(quick=quick)
+    rows.extend(rows_l)
+    records.extend(records_l)
+    # quick mode stays below the dense-vs-edge wall-clock crossover (see
+    # _run_layouts), so only the full run records the committed artifact —
+    # CI gates on its state_layout section showing the edge win on star
+    if not quick:
+        with open("BENCH_wire.json", "w") as f:
+            json.dump(records, f, indent=1)
+    rows.append(("bench_wire_json", 0,
+                 "quick smoke (artifact untouched)" if quick
+                 else "wrote BENCH_wire.json"))
     return rows
+
+
+def _hlo_flops(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def _run_layouts(quick=False):
+    """Port-dense vs edge-indexed graph_step state layouts.
+
+    The pre-refactor 'port' layout aggregates neighbor terms through dense
+    (N, N) / (N, E) operators — O(N^2 d) + O(N E d) per phase regardless of
+    how sparse the graph is.  The 'edge' layout (the default since the
+    O(E) refactor) gathers over the 2E directed edges and segment_sums —
+    O(E d).  Star is the worst case for the dense form (E = N-1 but the
+    operators stay N-dense), torus2d the structured-sparse case (E = 2N).
+    Both layouts are bitwise-identical (property-tested in
+    tests/test_gadmm.py); this records the step-time and HLO-FLOP cost of
+    keeping the dense state around.
+
+    Sizing: the dense operators only lose on the wall clock once N·d (the
+    adjacency matmul) outweighs the solve einsum and quantizer that both
+    layouts share — on this CPU that crossover is around N=512 at d=64
+    (below it the dense matmul hides in the shared work even at 5-10x the
+    HLO FLOPs), so the full run sits above it and quick mode only records
+    the FLOP ratio.
+    """
+    import functools
+
+    from repro.core import gadmm as cg
+    from repro.core.topology import build_topology
+
+    n_star, n_torus, d = (64, 16, 32) if quick else (512, 256, 64)
+    cfg = GADMMConfig(rho=1.0, quantize=True, qcfg=QuantizerConfig(bits=4))
+    rows, records = [], []
+    for topology, n in (("star", n_star), ("torus2d", n_torus)):
+        topo = build_topology(topology, n)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        xs = jax.random.normal(k1, (n, 8, d))
+        ys = jax.random.normal(k2, (n, 8))
+        q = cg.make_graph_quadratic(xs, ys, cfg.rho, topo)
+        state = cg.graph_init_state(topo, d, cfg)
+        flops = {}
+        us = {}
+        for layout in ("port", "edge"):
+            step = jax.jit(functools.partial(cg.graph_step, q=q, cfg=cfg,
+                                             topo=topo, layout=layout))
+            flops[layout] = _hlo_flops(step.lower(state).compile())
+            us[layout] = _timeit(lambda: step(state), reps=20)
+            rows.append((f"graph_step_{topology}_{layout}", us[layout],
+                         f"n={n};e={topo.num_edges};d={d};"
+                         f"hlo_flops={flops[layout]:.3g}"))
+        rows.append((f"graph_step_{topology}_edge_win", 0,
+                     f"time_x={us['port'] / us['edge']:.2f};"
+                     f"flops_x={flops['port'] / flops['edge']:.2f}"))
+        records.append(dict(
+            section="state_layout", topology=topology, num_workers=n,
+            num_edges=int(topo.num_edges), d=d,
+            port_step_us=us["port"], edge_step_us=us["edge"],
+            port_hlo_flops=flops["port"], edge_hlo_flops=flops["edge"],
+            time_speedup_edge=us["port"] / us["edge"],
+            flops_ratio_edge=flops["port"] / flops["edge"]))
+    return rows, records
 
 
 def main(quick=False):

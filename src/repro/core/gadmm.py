@@ -321,13 +321,25 @@ def make_graph_quadratic(xs: Array, ys: Array, rho: float, topo) -> Quadratic:
 
 
 def graph_consts(topo):
-    """Static jnp views of the topology used inside the jitted step."""
+    """Static jnp views of the topology used inside the jitted step.
+
+    Carries BOTH state layouts: the dense port-style operators (``adj``,
+    ``inc`` — O(N^2) / O(N*E) aggregation work) and the O(E) directed
+    edge-index arrays from ``topology.edge_index`` (``d_src``/``d_dst``/
+    ``d_edge``, sorted by (dst, src)).  ``_graph_solve_all`` aggregates
+    through either; they are bitwise-identical on CPU (property-tested in
+    tests/test_gadmm.py) because the segment_sum adds each worker's
+    neighbor terms in the same ascending order the dense row reduction
+    uses."""
     import numpy as np
+
+    from .topology import edge_index
 
     n = topo.n
     inc = np.zeros((n, max(topo.num_edges, 1)), np.float32)
     for e, (h, t) in enumerate(topo.edges):
         inc[h, e] = inc[t, e] = 1.0
+    eidx = edge_index(topo)
     return dict(
         head=jnp.asarray(topo.head_mask),
         adj=jnp.asarray(topo.adjacency(), jnp.float32),
@@ -336,6 +348,10 @@ def graph_consts(topo):
                            np.zeros((0,), np.int64)),
         e_tail=jnp.asarray(topo.edges[:, 1] if topo.num_edges else
                            np.zeros((0,), np.int64)),
+        n=n,
+        d_src=jnp.asarray(eidx.src),
+        d_dst=jnp.asarray(eidx.dst),
+        d_edge=jnp.asarray(eidx.edge),
     )
 
 
@@ -343,7 +359,7 @@ _graph_consts = graph_consts  # pre-PR-4 name
 
 
 def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
-                     tc) -> Array:
+                     tc, layout: str = "edge") -> Array:
     """Closed-form local argmin for every worker on the graph.
 
     Node n minimizes f_n + s_n * sum_e<n> <lam_e, theta_n - hat_nbr> +
@@ -351,16 +367,42 @@ def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
     dual's canonical orientation is head -> tail), giving
       (XtX + deg_n rho I) theta_n = Xty_n - s_n sum_e lam_e
                                     + rho sum_nbr hat_nbr.
+
+    layout='edge' (default) aggregates the neighbor sums with one
+    segment_sum over the 2E directed edges — O(E*d) work.  layout='port'
+    is the pre-refactor dense form (inc @ lam, adj @ hat — O(N*E*d) /
+    O(N^2*d)), kept as the comparator for the bitwise-equivalence
+    property test and the benchmark baseline.
     """
     sign = jnp.where(tc["head"], 1.0, -1.0)[:, None]
-    lam_sum = tc["inc"] @ lam if lam.shape[0] else jnp.zeros_like(hat)
-    rhs = q.xty - sign * lam_sum + rho * (tc["adj"] @ hat)
+    if layout == "port":
+        lam_sum = tc["inc"] @ lam if lam.shape[0] else jnp.zeros_like(hat)
+        nbr_sum = tc["adj"] @ hat
+    else:
+        assert layout == "edge", layout
+        n = tc["n"]
+        if lam.shape[0]:
+            # directed edges sorted by (dst, src): worker n's terms are
+            # added in ascending neighbor order, matching the dense row
+            # reduction bit for bit on CPU
+            lam_sum = jax.ops.segment_sum(lam[tc["d_edge"]], tc["d_dst"],
+                                          num_segments=n,
+                                          indices_are_sorted=True)
+            nbr_sum = jax.ops.segment_sum(hat[tc["d_src"]], tc["d_dst"],
+                                          num_segments=n,
+                                          indices_are_sorted=True)
+        else:
+            # degenerate graphs (W=1): no edges, no neighbor terms
+            lam_sum = jnp.zeros_like(hat)
+            nbr_sum = jnp.zeros_like(hat)
+    rhs = q.xty - sign * lam_sum + rho * nbr_sum
     return jnp.einsum("nde,ne->nd", q.minv, rhs)
 
 
 def graph_phase(theta: Array, hat: Array, lam: Array, radius: Array,
                 bits: Array, active: Array, key: Array, *, q: Quadratic,
-                cfg: GADMMConfig, tc, step: Array, censor=None):
+                cfg: GADMMConfig, tc, step: Array, censor=None,
+                layout: str = "edge"):
     """One phase of the graph sweep: the `active` group solves its local
     problems, quantizes, and (optionally) censors.
 
@@ -375,7 +417,7 @@ def graph_phase(theta: Array, hat: Array, lam: Array, radius: Array,
     """
     from .censor import transmit_mask
 
-    theta_all = _graph_solve_all(q, lam, hat, cfg.rho, tc)
+    theta_all = _graph_solve_all(q, lam, hat, cfg.rho, tc, layout=layout)
     theta = jnp.where(active[:, None], theta_all, theta)
     hat_new, r_new, b_new, qlev = quantize_rows(
         theta, hat, active, key, radius, bits, cfg)
@@ -405,7 +447,7 @@ def graph_dual_update(lam: Array, hat: Array, cfg: GADMMConfig, tc,
 
 
 def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
-               censor=None) -> GraphState:
+               censor=None, layout: str = "edge") -> GraphState:
     """One censored GGADMM/CQ-GGADMM iteration on an arbitrary bipartite
     topology (heads phase + tails phase + per-edge dual update).
 
@@ -414,6 +456,10 @@ def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
     clears the decaying threshold — everyone else's neighbors (and the
     worker itself) keep the previous hat, and the round is recorded in
     state.sent for wire accounting (graph_bits_per_round).
+
+    `layout` selects the neighbor-aggregation state layout: 'edge' (the
+    O(E) segment_sum default) or 'port' (pre-refactor dense operators) —
+    bitwise-identical on CPU, property-tested in tests/test_gadmm.py.
     """
     tc = graph_consts(topo)
     is_head = tc["head"]
@@ -421,10 +467,12 @@ def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
 
     theta, hat, radius, bits, sent_h, _ = graph_phase(
         state.theta, state.theta_hat, state.lam, state.radius, state.bits,
-        is_head, k_h, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor)
+        is_head, k_h, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor,
+        layout=layout)
     theta, hat, radius, bits, sent_t, _ = graph_phase(
         theta, hat, state.lam, radius, bits,
-        ~is_head, k_t, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor)
+        ~is_head, k_t, q=q, cfg=cfg, tc=tc, step=state.step, censor=censor,
+        layout=layout)
     lam = graph_dual_update(state.lam, hat, cfg, tc)
 
     return GraphState(theta=theta, theta_hat=hat, lam=lam, radius=radius,

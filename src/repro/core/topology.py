@@ -170,6 +170,102 @@ class Topology:
             a[self.edges[:, 1], self.edges[:, 0]] = True
         return a
 
+    def edge_lookup(self, i: int) -> dict[int, int]:
+        """Worker i's {neighbor id -> undirected edge id} map (the
+        derivation GraphActor and the timeline share)."""
+        out = {}
+        for e, (h, t) in enumerate(self.edges):
+            if int(h) == i:
+                out[int(t)] = e
+            elif int(t) == i:
+                out[int(h)] = e
+        return out
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EdgeIndex:
+    """Directed-edge view of a Topology — the O(E) state layout.
+
+    Every undirected edge (h, t) appears twice, once per direction
+    ``src -> dst``; a directed edge d is the slot where worker ``dst[d]``
+    stores what it knows about ``src[d]`` (the neighbor-hat reconstruction
+    and its mirror of the shared edge dual).  Directed edges are sorted by
+    ``(dst, src)``: each worker's incoming slots are contiguous, and a
+    ``segment_sum`` over ``dst`` adds a worker's neighbor terms in
+    ascending-neighbor order — the same order a dense ``adj @ hat``
+    row-reduction uses, which is what keeps the edge-indexed aggregation
+    bitwise-identical to the port-dense one on CPU.
+
+    src, dst: (2E,) worker ids (payloads flow src -> dst).
+    edge:     (2E,) undirected edge id into ``topo.edges``.
+    color:    (2E,) edge color of that edge (Koenig matching index).
+    slot:     (N, C) int: ``slot[w, c]`` = the directed edge with dst=w
+              whose color is c, or -1 where w has no color-c edge — the
+              port-dense <-> edge-indexed projection table.
+    sign_dst: (2E,) float32: +1.0 where dst is the head endpoint, -1.0
+              where it is the tail (the dual's canonical head -> tail
+              orientation, seen from the storing endpoint).
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    edge: np.ndarray
+    color: np.ndarray
+    slot: np.ndarray
+    sign_dst: np.ndarray
+
+    @property
+    def num_directed(self) -> int:
+        return len(self.src)
+
+    def in_edges(self, i: int) -> dict[int, int]:
+        """Worker i's {neighbor id -> directed edge with dst=i} map."""
+        ds = np.flatnonzero(self.dst == i)
+        return {int(self.src[d]): int(d) for d in ds}
+
+
+def edge_index(topo: Topology) -> EdgeIndex:
+    """Build the directed-edge tables for a topology (W=1 / E=0 safe:
+    every array is empty and ``slot`` is all -1)."""
+    n, c_max = topo.port.shape
+    e = topo.edges
+    if len(e) == 0:
+        z = np.zeros((0,), np.int64)
+        return EdgeIndex(src=z, dst=z, edge=z, color=z.copy(),
+                         slot=-np.ones((n, c_max), np.int64),
+                         sign_dst=np.zeros((0,), np.float32))
+    # color of each undirected edge from the port table
+    ecolor = np.empty(len(e), np.int64)
+    for i, (h, t) in enumerate(e):
+        ecolor[i] = int(np.flatnonzero(topo.port[h] == t)[0])
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    eid = np.concatenate([np.arange(len(e))] * 2)
+    order = np.lexsort((src, dst))
+    src, dst, eid = src[order], dst[order], eid[order]
+    color = ecolor[eid]
+    slot = -np.ones((n, c_max), np.int64)
+    slot[dst, color] = np.arange(len(dst))
+    sign_dst = np.where(topo.head_mask[dst], 1.0, -1.0).astype(np.float32)
+    return EdgeIndex(src=src, dst=dst, edge=eid, color=color, slot=slot,
+                     sign_dst=sign_dst)
+
+
+def edge_schedule(topo: Topology) -> list[list[tuple[int, int]]]:
+    """One ppermute permutation per edge color, derived from the graph.
+
+    Color class c is a matching, so sending BOTH directions of each of its
+    edges is still a valid (partial) permutation: every worker appears at
+    most once as source and once as destination.  Workers without a
+    color-c edge receive ppermute's zero fill.  This is the single
+    canonical schedule derivation — the distributed trainer's exchange and
+    the simulator consume the same list."""
+    perms = []
+    for m in topo.matchings():
+        perms.append([(int(u), int(v)) for u, v in m]
+                     + [(int(v), int(u)) for u, v in m])
+    return perms
+
 
 def _make(kind: str, n: int, raw_edges,
           prefer_head: int | None = None) -> Topology:

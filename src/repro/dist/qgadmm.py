@@ -49,13 +49,41 @@ collectives at all.
 
 Beyond the paper's chain, `DistConfig.topology` runs the same two-phase
 sweep on any connected bipartite worker graph (core.topology: 'ring',
-'star', '2d-torus', or an explicit Topology).  The neighbor state
-generalizes from left/right to one slot per EDGE COLOR of the graph: a
-proper edge coloring (Koenig) splits the edges into matchings, and each
-matching is exactly one jax.lax.ppermute permutation — the collective
-schedule is derived from the graph, never hard-coded +-1 shifts.  Duals
-live per edge (canonical head->tail orientation), mirrored by both
-endpoints.
+'star', '2d-torus', or an explicit Topology).  A proper edge coloring
+(Koenig) splits the edges into matchings, and each matching is exactly
+one jax.lax.ppermute permutation — the collective schedule is the
+canonical core.topology.edge_schedule, derived from the graph, never
+hard-coded +-1 shifts.
+
+State layout (O(C) -> O(E)).  Neighbor state is EDGE-INDEXED: the
+topology's 2E directed edges (core.topology.edge_index, sorted by
+(dst, src)) each own one slab row, so `DistState.hat_edge[d]` is what
+worker dst(d) knows about src(d)'s hat and `lam_edge[d]` is dst(d)'s
+mirror of the shared edge dual (canonical head -> tail orientation; both
+directions of an edge hold bitwise-equal mirrors in lockstep).  The old
+port-dense layout kept C = max-degree full (W, ...) tuples — O(W*C*D)
+memory and per-step dequantize/dual work even at degree 1; the slabs are
+O(E*D), and `edge_index.slot` projects them back to per-(worker, color)
+port views wherever the math is per-worker (the local loss) or the
+transport is per-color (the sharded ppermute exchange).  The projection
+is exact: gathered rows are the stored rows, missing ports read as the
+zeros they always were.
+
+`DistConfig.staleness = S > 0` replaces the per-color exchange barrier
+with an explicit send / recv-start / recv-done pipeline: each round's
+merged head+tail payload is SENT into an S-deep in-flight ring buffer
+(`DistState.inbox` — recv-start), and the round-(k-S) entry is decoded
+into the edge slabs at the top of round k (recv-done), so every worker
+computes against neighbor hats that are exactly S rounds stale.  Duals
+update against the matching S-stale snapshot of the worker's OWN hat
+(`DistState.hat_lag`, decoded from the same payload stream), so both
+endpoints of an edge keep pairing the same (head, tail) hat rounds and
+the dual mirrors stay synchronized — the trainer-side analog of
+sim.worker's fresh-edge dual gating, with the first S pipeline-fill
+rounds gated off.  Wire accounting bills a payload on the round it is
+sent, never the round it is consumed.  S=0 is the barriered schedule,
+bitwise-identical to the pre-refactor port-dense trainer
+(tests/test_wire_path.py replays committed goldens to pin this).
 
 `DistConfig.censor` adds CQ-GGADMM censored transmissions (core.censor): a
 worker whose freshly quantized model moved less than tau*xi^k in L2 keeps
@@ -82,7 +110,8 @@ from repro.core import censor as censor_mod
 from repro.core.censor import CensorConfig
 from repro.core.gadmm import GADMMConfig
 from repro.core.quantizer import _next_bits
-from repro.core.topology import Topology, build_topology
+from repro.core.topology import (Topology, build_topology, edge_index,
+                                 edge_schedule)
 from repro.kernels.pack import ops as pack_ops
 from repro.kernels.pack.ref import packed_len
 from repro.kernels.quantize import quantize as q_kernel
@@ -131,6 +160,14 @@ class DistConfig:
     censor:      optional core.censor.CensorConfig: transmit a phase's
                  quantized delta only when ||hat_new - hat_prev||_2 >
                  tau*xi^k; skipped links cost 1 flag bit on the wire.
+    staleness:   S = 0 (default): barriered per-color exchange, every
+                 round consumes this round's payloads.  S > 0: pipelined
+                 send/recv-start/recv-done exchange — payloads spend S
+                 rounds in flight (DistState.inbox) and every worker
+                 computes against neighbor hats exactly S rounds old,
+                 duals fresh-edge-gated onto matching S-stale snapshots
+                 (the trainer promotion of repro.sim's bounded-staleness
+                 async schedule; see the module docstring).
     """
 
     num_workers: int
@@ -148,6 +185,7 @@ class DistConfig:
     overlap: bool = False
     topology: Any = "chain"
     censor: CensorConfig | None = None
+    staleness: int = 0
 
     def __post_init__(self):
         assert self.mode in ("gauss-seidel", "jacobi"), self.mode
@@ -158,6 +196,11 @@ class DistConfig:
         assert not (self.overlap and self.mode != "gauss-seidel"), \
             "overlap (double-buffered exchange) only applies to the " \
             "two-phase gauss-seidel mode"
+        assert self.staleness >= 0, self.staleness
+        assert self.staleness == 0 or (self.mode == "gauss-seidel"
+                                       and not self.overlap), \
+            "staleness > 0 pipelines the two-phase gauss-seidel exchange " \
+            "(jacobi and overlap have their own schedules)"
         # The chain wire is always dense; top-k sparsification only exists in
         # the single-host reference (gadmm._quantize_rows) so far.
         assert self.gadmm.topk_frac >= 1.0, \
@@ -172,20 +215,30 @@ class DistConfig:
 
 
 class DistState(NamedTuple):
-    """Replicated-per-worker chain state; every pytree leaf is stacked with a
-    leading (num_workers,) dim sharded over the mesh 'worker' axis.
+    """Replicated-per-worker chain state; parameter-shaped pytree leaves are
+    stacked with a leading (num_workers,) dim sharded over the mesh
+    'worker' axis.
 
-    Neighbor state is indexed by EDGE COLOR (port): the topology's edges are
-    edge-colored into C = max-degree matchings, and port c of worker w holds
-    the state of w's color-c partner (untouched rows where w has no color-c
-    edge).  A chain has C = 2 ports — the old hat_left/hat_right — a star
-    has C = n-1, a 2d-torus C = 4."""
+    Neighbor state is EDGE-INDEXED (O(E), not O(W*C)): the topology's 2E
+    directed edges (core.topology.edge_index, sorted by (dst, src)) each
+    own one slab row.  ``hat_edge`` leaf rows are what dst(d) knows about
+    src(d)'s hat; ``lam_edge`` rows are dst(d)'s mirror of the shared edge
+    dual (canonical head -> tail orientation — in lockstep both directions
+    of an edge are bitwise-equal).  ``edge_index.slot[w, c]`` projects a
+    slab back to the per-(worker, edge-color) port view where needed.  A
+    chain has 2E = 2(W-1) rows, a star 2(W-1), a 2d-torus 4W — always
+    2E = sum of degrees, never W * max-degree.
+
+    ``inbox``/``hat_lag`` exist only at staleness S > 0: the S-deep ring of
+    in-flight payload rounds ({wire, radius, bits, sent} stacked with a
+    leading (S,) dim) and the worker's own hat delayed S rounds (decoded
+    from the same payload stream the neighbors decode — the consistent
+    snapshot the dual update pairs against)."""
 
     theta: Any      # current primal parameters
     theta_hat: Any  # own last-quantized model (== what neighbors hold)
-    hat_nbr: Any    # tuple over ports: reconstruction of the partner's hat
-    lam_nbr: Any    # tuple over ports: dual on the port's edge, canonical
-                    # head->tail orientation (both endpoints mirror it)
+    hat_edge: Any   # directed-edge slab (2E, ...): dst's view of src's hat
+    lam_edge: Any   # directed-edge slab (2E, ...): dst's dual mirror
     radius: Array   # (W,) global mode | (W, n_tensors) per_tensor mode
     bits: Array     # (W,) int32
     opt_mu: Any     # local Adam first moment
@@ -193,6 +246,8 @@ class DistState(NamedTuple):
     opt_t: Array    # (W,) int32 Adam step counts
     key: Array      # PRNG key (stochastic rounding)
     step: Array     # () int32
+    inbox: Any = () # staleness > 0: S-deep in-flight payload ring
+    hat_lag: Any = ()  # staleness > 0: own hat, S rounds delayed
 
 
 def init_state(init_fn: Callable[[Array], Any], key: Array,
@@ -213,16 +268,32 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
     n_tensors = len(jax.tree.leaves(theta))
     radius = (jnp.zeros((w,), jnp.float32) if dcfg.radius_mode == "global"
               else jnp.zeros((w, n_tensors), jnp.float32))
-    ports = topo.num_ports
+    de = 2 * topo.num_edges
+    edge_zeros = lambda: jax.tree.map(
+        lambda a: jnp.zeros((de,) + a.shape, a.dtype), params)
+    inbox, hat_lag = (), ()
+    if dcfg.staleness > 0:
+        s = dcfg.staleness
+        d = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        wire_dtype = jnp.uint8 if dcfg.gadmm.quantize else jnp.float32
+        inbox = {
+            "wire": jnp.zeros((s, w, d), wire_dtype),
+            "radius": jnp.zeros((s,) + radius.shape, jnp.float32),
+            "bits": jnp.zeros((s, w), jnp.int32),
+            # all-False sent flags = the pipeline-fill rounds decode to
+            # no-ops, exactly like S censored rounds
+            "sent": jnp.zeros((s, w), bool),
+        }
+        hat_lag = zeros()
     return DistState(
         theta=theta, theta_hat=zeros(),
-        hat_nbr=tuple(zeros() for _ in range(ports)),
-        lam_nbr=tuple(zeros() for _ in range(ports)),
+        hat_edge=edge_zeros(), lam_edge=edge_zeros(),
         radius=radius,
         bits=jnp.full((w,), dcfg.gadmm.qcfg.bits, jnp.int32),
         opt_mu=zeros(), opt_nu=zeros(),
         opt_t=jnp.zeros((w,), jnp.int32),
-        key=k_state, step=jnp.zeros((), jnp.int32))
+        key=k_state, step=jnp.zeros((), jnp.int32),
+        inbox=inbox, hat_lag=hat_lag)
 
 
 # ------------------------------------------------------------- tree utils ---
@@ -274,6 +345,49 @@ class QGADMMTrainer:
                         for c in range(self.topo.num_ports)]
         self.is_head = jnp.asarray(self.topo.head_mask)
         self.sign = jnp.where(self.is_head, 1.0, -1.0).astype(jnp.float32)
+        # Directed-edge tables for the O(E) neighbor-state slabs.
+        self.eidx = edge_index(self.topo)
+        self._d_src = jnp.asarray(self.eidx.src, jnp.int32)    # (2E,)
+        self._d_dst = jnp.asarray(self.eidx.dst, jnp.int32)    # (2E,)
+        self._d_sign = jnp.asarray(self.eidx.sign_dst)         # (2E,) f32
+        self._d_color = jnp.asarray(self.eidx.color, jnp.int32)  # (2E,)
+        slot = self.eidx.slot                                  # (W, C) np
+        ports = self.topo.num_ports
+        # slot clamped to 0 for the port-view gather (masked to zeros after)
+        self._view_idx = [jnp.asarray(np.where(slot[:, c] >= 0, slot[:, c],
+                                               0), np.int32)
+                          for c in range(ports)]
+
+    def _replicate(self, tree):
+        """Pin every leaf of a pytree to the fully replicated layout (a
+        with_sharding_constraint; only meaningful inside the sharded jit)."""
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, P(*(None,) * jnp.ndim(x)))),
+            tree)
+
+    # ------------------------------------------------------------ views ----
+    def _port_view(self, slab):
+        """Edge-slab pytree (2E, ...) -> tuple over edge colors of stacked
+        (W, ...) trees (the port-dense layout the per-worker local loss is
+        written against).  Exact: active rows are gathered slab rows,
+        missing ports read as the zeros those rows always held in the
+        port-dense layout."""
+        outs = []
+        for c in range(self.topo.num_ports):
+            idx, on = self._view_idx[c], self.port_on[c]
+            outs.append(jax.tree.map(
+                lambda s: jnp.where(_bmask(on, s[idx]), s[idx],
+                                    jnp.zeros_like(s[idx])), slab))
+        return tuple(outs)
+
+    def port_views(self, state: DistState) -> dict:
+        """Public projection of the edge-indexed neighbor state back to the
+        pre-refactor per-(worker, color) port views — the layout-independent
+        surface the golden replay tier and the sim parity tests compare."""
+        return {"hat_nbr": self._port_view(state.hat_edge),
+                "lam_nbr": self._port_view(state.lam_edge)}
 
     # ------------------------------------------------------------ specs ----
     def batch_specs(self, batch):
@@ -291,15 +405,26 @@ class QGADMMTrainer:
         au = self.dcfg.uneven_shard
         pspec = functools.partial(sh.tree_specs, leaf_rule=sh.leaf_train_spec,
                                   mesh=self.mesh, allow_uneven=au)
+        espec = functools.partial(sh.tree_specs, leaf_rule=sh.leaf_edge_spec,
+                                  mesh=self.mesh, allow_uneven=au)
         wspec = P("worker") if self.dcfg.num_workers > 1 else P(None)
+        inbox, hat_lag = (), ()
+        if self.dcfg.staleness > 0:
+            inbox = {
+                "wire": P(None, *wspec, None),
+                "radius": (P(None, *wspec) if state.inbox["radius"].ndim == 2
+                           else P(None, *wspec, None)),
+                "bits": P(None, *wspec),
+                "sent": P(None, *wspec),
+            }
+            hat_lag = pspec(state.hat_lag)
         return DistState(
             theta=pspec(state.theta), theta_hat=pspec(state.theta_hat),
-            hat_nbr=tuple(pspec(h) for h in state.hat_nbr),
-            lam_nbr=tuple(pspec(l) for l in state.lam_nbr),
+            hat_edge=espec(state.hat_edge), lam_edge=espec(state.lam_edge),
             radius=(wspec if state.radius.ndim == 1
                     else P(*wspec, None)),
             bits=wspec, opt_mu=pspec(state.opt_mu), opt_nu=pspec(state.opt_nu),
-            opt_t=wspec, key=P(None), step=P())
+            opt_t=wspec, key=P(None), step=P(), inbox=inbox, hat_lag=hat_lag)
 
     def _shardings(self, specs):
         return sh.tree_shardings(specs, self.mesh)
@@ -320,12 +445,14 @@ class QGADMMTrainer:
         return "ref" if self.dcfg.wire_impl == "jnp" else self.dcfg.wire_impl
 
     def _flatten_rows(self, leaves, dtype):
-        """[(W, ...)] -> one (W, D) buffer (zero-size leaves contribute 0
-        columns)."""
-        w = self.dcfg.num_workers
-        cols = [l.reshape(w, -1).astype(dtype) for l in leaves]
+        """[(R, ...)] -> one (R, D) buffer (zero-size leaves contribute 0
+        columns).  R is whatever leading dim the leaves carry — the worker
+        count on the stacked wire path, a per-color edge-row count on the
+        slab decode path."""
+        rows = leaves[0].shape[0] if leaves else self.dcfg.num_workers
+        cols = [l.reshape(rows, -1).astype(dtype) for l in leaves]
         if not cols:
-            return jnp.zeros((w, 0), dtype)
+            return jnp.zeros((rows, 0), dtype)
         return jnp.concatenate(cols, axis=1)
 
     def _pad_wire(self, flat):
@@ -357,12 +484,14 @@ class QGADMMTrainer:
         return wire[:, :n]
 
     def _unflatten_wire(self, wire, templates):
-        """(W, D_pad) float buffer -> [(W, ...)] leaves shaped like
-        `templates` (full-precision GADMM wire; no packing)."""
+        """(R, D_pad) float buffer -> [(R, ...)] leaves with the templates'
+        per-row shapes (full-precision GADMM wire; no packing).  R follows
+        the buffer, not the templates."""
         out, off = [], 0
+        rows = wire.shape[0]
         for t in templates:
             size = int(np.prod(t.shape[1:]))
-            out.append(wire[:, off:off + size].reshape(t.shape))
+            out.append(wire[:, off:off + size].reshape((rows,) + t.shape[1:]))
             off += size
         return out
 
@@ -379,17 +508,13 @@ class QGADMMTrainer:
         return jax.tree.unflatten(treedef, out)
 
     def _port_perms(self) -> list[list[tuple[int, int]]]:
-        """One ppermute permutation per edge color, derived from the graph.
-
-        Color class c is a matching, so sending BOTH directions of each of
-        its edges is still a valid (partial) permutation: every worker
-        appears at most once as source and once as destination.  Workers
-        without a color-c edge receive ppermute's zero fill."""
-        perms = []
-        for m in self.topo.matchings():
-            perms.append([(int(u), int(v)) for u, v in m]
-                         + [(int(v), int(u)) for u, v in m])
-        return perms
+        """One ppermute permutation per edge color — the canonical
+        core.topology.edge_schedule (shared with the sim's per-message
+        scheduling).  Color class c is a matching, so sending BOTH
+        directions of each of its edges is still a valid (partial)
+        permutation; workers without a color-c edge receive ppermute's
+        zero fill."""
+        return edge_schedule(self.topo)
 
     def _make_exchange(self, sharded: bool):
         """payload pytree of (W, ...) arrays -> tuple over ports.
@@ -689,7 +814,11 @@ class QGADMMTrainer:
         g = self.dcfg.gadmm
         cc = self.dcfg.censor
         w = self.dcfg.num_workers
-        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        # project the edge slabs to the per-(worker, color) port views the
+        # per-worker local loss is written against (exact; see _port_view)
+        hat_nbr = self._port_view(hat_edge)
+        lam_nbr = self._port_view(lam_edge)
         new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
             theta, mu, nu, t, batch, lam_nbr, hat_nbr, self.pmask, self.sign)
         theta = _twhere(active, new_theta, theta)
@@ -735,60 +864,91 @@ class QGADMMTrainer:
             payload = {"wire": self._flatten_wire(
                 jax.tree.leaves(hat), jnp.float32), "sent": sent}
 
-        return (theta, hat, hat_nbr, lam_nbr, radius, bits,
+        return (theta, hat, hat_edge, lam_edge, radius, bits,
                 mu, nu, t), payload, f0
 
-    def phase_apply(self, st, recv):
-        """Fold the exchanged payloads into the per-port neighbor hats.
+    def phase_apply(self, st, recv, sharded: bool = False):
+        """Fold the exchanged payloads into the edge-indexed neighbor hats.
 
         recv[c]['sent'][w] is the exchanged censor flag: did w's color-c
         partner transmit?  Censored (or phase-inactive) partners leave
         the stored hat untouched — exactly what their own rolled-back
-        state holds, preserving bit-sync."""
+        state holds, preserving bit-sync.  Directed row d is served by
+        the payload worker dst[d] received on port color[d], so the whole
+        slab commits as ONE uniform gather + decode + where over the 2E
+        rows — one decode per directed edge, O(E) work instead of the
+        port-dense O(W*C).
+
+        The full-slab form is deliberate: an earlier per-color version
+        (static row-subset gather, decode, ``.at[rows].set`` scatter)
+        was miscompiled by XLA:CPU's SPMD partitioner inside the fused
+        sharded step — O(1) absolute garbage in the committed rows once
+        the slab was nonzero (same bug family as the RoPE and
+        in-shard-codec notes; sharding pins on the operands did NOT fix
+        the fused program).  The uniform gather/where form avoids the
+        scatter entirely.  sharded=True additionally pins the decode's
+        operands replicated — the slabs are O(E*D) and every worker
+        stores them anyway, so that is the intended semantics, not a
+        workaround cost."""
         g = self.dcfg.gadmm
-        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-        templates = jax.tree.leaves(theta)
-        treedef = jax.tree.structure(theta)
-        d = sum(_leaf_sizes(templates))
-        new_nbr = []
-        for c in range(self.topo.num_ports):
-            from_c = recv[c]
-            got = from_c["sent"] & self.port_on[c]
-            if g.quantize:
-                qc = self._strip_wire(from_c["wire"], d)
-                dec = self._dequantize_all(
-                    qc, hat_nbr[c], from_c["radius"], from_c["bits"])
-                new_nbr.append(_twhere(got, dec, hat_nbr[c]))
-            else:
-                ls = self._unflatten_wire(from_c["wire"], templates)
-                cast = jax.tree.unflatten(
-                    treedef, [l.astype(r.dtype) for l, r in
-                              zip(ls, jax.tree.leaves(hat_nbr[c]))])
-                new_nbr.append(_twhere(got, cast, hat_nbr[c]))
-        return (theta, hat, tuple(new_nbr), lam_nbr, radius, bits,
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        if self.eidx.num_directed == 0:
+            return st
+        if sharded:
+            recv, hat_edge = self._replicate((recv, hat_edge))
+        col, dst = self._d_color, self._d_dst
+
+        def pick(k):
+            # (C, W, ...) stacked payloads -> per-directed-row (2E, ...)
+            return jnp.stack([r[k] for r in recv])[col, dst]
+
+        got = pick("sent")
+        wire = pick("wire")
+        if g.quantize:
+            d = sum(_leaf_sizes(jax.tree.leaves(theta)))
+            dec = self._dequantize_all(self._strip_wire(wire, d), hat_edge,
+                                       pick("radius"), pick("bits"))
+        else:
+            treedef = jax.tree.structure(hat_edge)
+            leaves = treedef.flatten_up_to(hat_edge)
+            ls = self._unflatten_wire(wire, leaves)
+            dec = jax.tree.unflatten(
+                treedef, [l.astype(r.dtype) for l, r in zip(ls, leaves)])
+        hat_edge = _twhere(got, dec, hat_edge)
+        return (theta, hat, hat_edge, lam_edge, radius, bits,
                 mu, nu, t)
 
-    def dual_update(self, st, port_mask=None):
+    def dual_update(self, st, edge_mask=None, sharded: bool = False):
         """Damped dual update (eq. 18) from reconstructed hats; both ends
         of each edge apply the same increment, keeping duals in sync:
         lam_e += a*rho*(hat_head - hat_tail), which the head computes
-        as +(own - nbr) and the tail as -(own - nbr).
+        as +(own - nbr) and the tail as -(own - nbr) — per directed edge
+        d that is sign_dst[d] * (hat[dst[d]] - hat_edge[d]).
 
-        `port_mask` (W, C) overrides the topology's port mask — the
-        simulator zeroes ports whose far endpoint dropped, freezing those
-        duals instead of integrating a stale residual forever."""
+        `edge_mask` (2E,) zeroes selected directed edges — the simulator
+        masks edges whose far endpoint dropped (freezing those duals
+        instead of integrating a stale residual forever), the staleness
+        pipeline masks everything during fill rounds.
+
+        sharded=True pins the worker-stacked hats replicated before the
+        (2E,)-row gather: leaving the gather on the worker-sharded
+        layout makes XLA:CPU's SPMD partitioner corrupt OTHER values in
+        the fused step (the committed hat_edge rows — the gather's mere
+        presence flips the partitioning of the decode upstream)."""
         g = self.dcfg.gadmm
-        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-        pm = self.pmask if port_mask is None else port_mask
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        if self.eidx.num_directed == 0:
+            return st
+        coef = (self._d_sign if edge_mask is None
+                else self._d_sign * edge_mask)   # (2E,) f32
         scale = g.alpha * g.rho
-        new_lam = []
-        for c in range(self.topo.num_ports):
-            coef = pm[:, c] * self.sign  # (W,) f32: +-1 on live ports
-            new_lam.append(jax.tree.map(
-                lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
-                * (a.astype(l.dtype) - b.astype(l.dtype)),
-                lam_nbr[c], hat, hat_nbr[c]))
-        return (theta, hat, hat_nbr, tuple(new_lam), radius, bits,
+        g_hat = self._replicate(hat) if sharded else hat
+        own = jax.tree.map(lambda a: a[self._d_dst], g_hat)
+        lam_edge = jax.tree.map(
+            lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
+            * (a.astype(l.dtype) - b.astype(l.dtype)),
+            lam_edge, own, hat_edge)
+        return (theta, hat, hat_edge, lam_edge, radius, bits,
                 mu, nu, t)
 
     def _build_step(self, sharded: bool):
@@ -807,14 +967,16 @@ class QGADMMTrainer:
         all_on = jnp.ones((w,), bool)
         exchange = (self._make_exchange(sharded) if topo.num_edges else None)
         phase_compute = functools.partial(self.phase_compute, sharded=sharded)
-        phase_apply = self.phase_apply
+        phase_apply = functools.partial(self.phase_apply, sharded=sharded)
+        dual_update = functools.partial(self.dual_update, sharded=sharded)
 
         def step(state: DistState, batch):
             key, k1, k2 = jax.random.split(state.key, 3)
-            st = (state.theta, state.theta_hat, state.hat_nbr,
-                  state.lam_nbr, state.radius, state.bits, state.opt_mu,
+            st = (state.theta, state.theta_hat, state.hat_edge,
+                  state.lam_edge, state.radius, state.bits, state.opt_mu,
                   state.opt_nu, state.opt_t)
             sent_phases = []
+            inbox, hat_lag = state.inbox, state.hat_lag
 
             def phase(st, active, k):
                 st, payload, f0 = phase_compute(st, batch, active, k,
@@ -824,7 +986,18 @@ class QGADMMTrainer:
                     st = phase_apply(st, exchange(payload))
                 return st, f0
 
-            if dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
+            stale = (dcfg.staleness > 0 and w > 1 and topo.num_edges > 0)
+            if stale:
+                # pipelined exchange: decode the round-(k-S) inbox entry
+                # (recv-done), run BOTH phases against those S-stale hats,
+                # dual-update on matching S-stale snapshots, then push this
+                # round's merged payload into the in-flight ring (send /
+                # recv-start).  Wire bits are billed below on THIS round —
+                # the round the payload is sent — never on the round it is
+                # eventually consumed.
+                st, hat_lag, f0, sent_phases, inbox = self._stale_round(
+                    st, batch, state, hat_lag, k1, k2, sharded)
+            elif dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
                 # double-buffered exchange: put the heads' payload on the
                 # wire, run the tails' local iterations against the PREVIOUS
                 # neighbor hats while it is in flight, then fold both
@@ -840,23 +1013,29 @@ class QGADMMTrainer:
                 sent_phases.append(pl_t["sent"])
                 st = phase_apply(st, recv_h)
                 st = phase_apply(st, exchange(pl_t))
+                st = dual_update(st)
             elif dcfg.mode == "gauss-seidel" and w > 1:
                 st, f0 = phase(st, is_head, k1)
                 st, _ = phase(st, ~is_head, k2)
+                st = dual_update(st)
             else:
                 st, f0 = phase(st, all_on, k1)
-            st = self.dual_update(st)
-            (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
+                st = dual_update(st)
+            (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
 
-            # consensus violation, each edge counted once (from its head)
+            # consensus violation, each edge counted once (from its head:
+            # directed rows whose dst is the head endpoint); gather from a
+            # replicated view — see dual_update's sharded note
             resid_sq = jnp.zeros(())
-            for c in range(ports):
-                m = port_on[c] & is_head
+            if self.eidx.num_directed:
+                m = self._d_sign > 0
+                g_hat = self._replicate(hat) if sharded else hat
+                own = jax.tree.map(lambda a: a[self._d_dst], g_hat)
                 resid_sq = resid_sq + sum(jax.tree.leaves(jax.tree.map(
                     lambda a, b: jnp.sum(_bmask(m, a)
                                          * (a.astype(jnp.float32)
                                             - b.astype(jnp.float32)) ** 2),
-                    hat, hat_nbr[c])))
+                    own, hat_edge)))
             sent_total = sum(jnp.sum(s.astype(jnp.float32))
                              for s in sent_phases)
             metrics = {
@@ -872,12 +1051,97 @@ class QGADMMTrainer:
                     jnp.float32),
             }
             new_state = DistState(
-                theta=theta, theta_hat=hat, hat_nbr=hat_nbr,
-                lam_nbr=lam_nbr, radius=radius, bits=bits,
-                opt_mu=mu, opt_nu=nu, opt_t=t, key=key, step=state.step + 1)
+                theta=theta, theta_hat=hat, hat_edge=hat_edge,
+                lam_edge=lam_edge, radius=radius, bits=bits,
+                opt_mu=mu, opt_nu=nu, opt_t=t, key=key, step=state.step + 1,
+                inbox=inbox, hat_lag=hat_lag)
             return new_state, metrics
 
         return step
+
+    # ------------------------------------------------- staleness pipeline --
+    def _decode_rows(self, wire, prev, radius, bits):
+        """Decode stripped wire rows against stored prev rows — the shared
+        recv-done arithmetic for neighbor slab rows and the own-hat lag
+        (identical to the barriered path's _dequantize_all, so a staleness
+        pipeline replays the exact bytes the S=0 exchange would)."""
+        if self.dcfg.gadmm.quantize:
+            return self._dequantize_all(wire, prev, radius, bits)
+        treedef = jax.tree.structure(prev)
+        leaves = treedef.flatten_up_to(prev)
+        ls = self._unflatten_wire(wire, leaves)
+        return jax.tree.unflatten(
+            treedef, [l.astype(r.dtype) for l, r in zip(ls, leaves)])
+
+    def _stale_round(self, st, batch, state: DistState, hat_lag, k1, k2,
+                     sharded: bool):
+        """One staleness-S round: recv-done on the oldest inbox entry, both
+        compute phases against the S-stale hats, fresh-edge-gated dual
+        update on matching S-stale snapshots, send into the ring."""
+        dcfg = self.dcfg
+        s_depth = dcfg.staleness
+        phase_compute = functools.partial(self.phase_compute, sharded=sharded)
+
+        # ---- recv-done: decode the round-(k-S) entry -----------------
+        entry = jax.tree.map(lambda a: a[0], state.inbox)
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        if sharded:
+            # same SPMD-partitioner pin as phase_apply(sharded=True)
+            entry, hat_edge, hat_lag = self._replicate(
+                (entry, hat_edge, hat_lag))
+        sent_e = entry["sent"][self._d_src]                    # (2E,)
+        dec_e = self._decode_rows(
+            entry["wire"][self._d_src], hat_edge,
+            entry["radius"][self._d_src], entry["bits"][self._d_src])
+        hat_edge = _twhere(sent_e, dec_e, hat_edge)
+        # own-hat snapshot, decoded from the SAME payload stream the
+        # neighbors decode — hat_lag[w] stays bitwise-equal to every
+        # hat_edge row with src=w, so dual mirrors cannot drift
+        dec_lag = self._decode_rows(entry["wire"], hat_lag,
+                                    entry["radius"], entry["bits"])
+        hat_lag = _twhere(entry["sent"], dec_lag, hat_lag)
+        st = (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t)
+
+        # ---- compute: both phases against the S-stale hats -----------
+        st, pl_h, f0 = phase_compute(st, batch, self.is_head, k1, state.step)
+        st, pl_t, _ = phase_compute(st, batch, ~self.is_head, k2, state.step)
+        sent_phases = [pl_h["sent"], pl_t["sent"]]
+
+        # ---- dual: S-stale own hat vs S-stale neighbor hat, gated off
+        # during the S pipeline-fill rounds (both sides are still the
+        # zero init then, so the gate is belt-and-braces explicitness —
+        # the sim's fresh-edge rule promoted to the trainer)
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        fresh = (state.step >= s_depth).astype(jnp.float32)
+        if self.eidx.num_directed:
+            coef = self._d_sign * fresh
+            scale = dcfg.gadmm.alpha * dcfg.gadmm.rho
+            own = jax.tree.map(lambda a: a[self._d_dst], hat_lag)
+            lam_edge = jax.tree.map(
+                lambda l, a, b: l + scale * _bmask(coef, l).astype(l.dtype)
+                * (a.astype(l.dtype) - b.astype(l.dtype)),
+                lam_edge, own, hat_edge)
+        st = (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t)
+
+        # ---- send / recv-start: merge the two phases' payloads (phases
+        # partition the workers, so row w comes from exactly one) and
+        # push into the ring; the oldest entry just consumed falls out
+        d = sum(_leaf_sizes(jax.tree.leaves(theta)))
+        mix = lambda a, b: jnp.where(_bmask(self.is_head, a), a, b)
+        w_arr = state.inbox["radius"]
+        merged = {
+            "wire": mix(self._strip_wire(pl_h["wire"], d),
+                        self._strip_wire(pl_t["wire"], d)),
+            "radius": (mix(pl_h["radius"], pl_t["radius"])
+                       if "radius" in pl_h else jnp.zeros_like(w_arr[0])),
+            "bits": (mix(pl_h["bits"], pl_t["bits"]) if "bits" in pl_h
+                     else jnp.zeros_like(state.inbox["bits"][0])),
+            "sent": pl_h["sent"] | pl_t["sent"],
+        }
+        inbox = jax.tree.map(
+            lambda buf, new: jnp.concatenate([buf[1:], new[None]], axis=0),
+            state.inbox, merged)
+        return st, hat_lag, f0, sent_phases, inbox
 
     # ------------------------------------------------------- accounting ----
     def wire_row_bytes(self, d: int) -> int:

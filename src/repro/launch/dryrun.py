@@ -126,7 +126,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                  bits: int = 8, seq_shard: bool = False,
                  wire_impl: str = "jnp", reduced: bool = False,
                  topology: str = "chain",
-                 censor: CensorConfig | None = None):
+                 censor: CensorConfig | None = None,
+                 staleness: int = 0):
     cfg = registry.get_config(
         arch, smoke=reduced, compute_dtype=jnp.bfloat16,
         param_dtype=jnp.float32, xent_mode=xent, attn_scan_remat=attn_remat,
@@ -145,7 +146,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
         local_iters=local_iters, microbatches=microbatches, mode=mode,
         state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
         seq_shard=seq_shard, wire_impl=wire_impl, topology=topology,
-        censor=censor)
+        censor=censor, staleness=staleness)
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
     state_structs = jax.eval_shape(
         functools.partial(init_state,
@@ -163,7 +164,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                    dict(mode=mode, workers=w, quantize=quantize,
                         t_lower=t_lower, t_compile=t_compile,
                         reduced=reduced, wire_impl=wire_impl,
-                        topology=topology, censor=censor is not None),
+                        topology=topology, censor=censor is not None,
+                        staleness=staleness),
                    verbose=verbose)
 
 
@@ -316,6 +318,10 @@ def main(argv=None):
                          "(--censor-tau/--censor-xi thresholds)")
     ap.add_argument("--censor-tau", type=float, default=0.05)
     ap.add_argument("--censor-xi", type=float, default=0.9)
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="S>0 compiles the pipelined exchange (send / "
+                         "recv-start / recv-done over an S-deep in-flight "
+                         "ring) instead of the per-color barrier")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke configs on 16-device meshes: records the "
                          "full 33-pair matrix on CPU (committed artifacts)")
@@ -354,7 +360,8 @@ def main(argv=None):
                                  topology=args.topology,
                                  censor=(CensorConfig(tau=args.censor_tau,
                                                       xi=args.censor_xi)
-                                         if args.censor else None))
+                                         if args.censor else None),
+                                 staleness=args.staleness)
             else:
                 r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
                                  windowed_cache=args.windowed_cache,

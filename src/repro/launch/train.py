@@ -39,6 +39,10 @@ def main(argv=None):
                     help="CQ-GGADMM censored transmissions")
     ap.add_argument("--censor-tau", type=float, default=0.05)
     ap.add_argument("--censor-xi", type=float, default=0.9)
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="S>0 pipelines the exchange: compute runs against "
+                         "S-round-old neighbor hats while S payload rounds "
+                         "stay in flight (dist.qgadmm staleness pipeline)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
@@ -80,7 +84,7 @@ def main(argv=None):
         gadmm=GADMMConfig(rho=args.rho, quantize=not args.no_quantize,
                           qcfg=QuantizerConfig(bits=args.bits), alpha=0.01),
         local_iters=args.local_iters, local_lr=args.lr, mode=args.mode,
-        topology=args.topology,
+        topology=args.topology, staleness=args.staleness,
         censor=(CensorConfig(tau=args.censor_tau, xi=args.censor_xi)
                 if args.censor else None))
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)

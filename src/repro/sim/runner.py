@@ -261,20 +261,19 @@ def _trainer_fns(trainer):
         return (st2, payload["sent"][i], hat_row, payload["wire"][i],
                 jnp.zeros(()), jnp.zeros((), jnp.int32))
 
-    @functools.partial(jax.jit, static_argnums=(1,))
-    def apply(st, c, i, row):
-        """Store the partner's committed hat row at port c (the value the
-        reference's in-program phase_apply reconstructs bit-identically;
-        see TrainerActor._phase)."""
-        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = st
-        new_c = jax.tree.map(lambda a, r: a.at[i].set(r.astype(a.dtype)),
-                             hat_nbr[c], row)
-        hat_nbr = hat_nbr[:c] + (new_c,) + hat_nbr[c + 1:]
-        return (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t)
+    @jax.jit
+    def apply(st, d, row):
+        """Store the partner's committed hat row at directed slab row d
+        (the value the reference's in-program phase_apply reconstructs
+        bit-identically; see TrainerActor._phase)."""
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
+        hat_edge = jax.tree.map(lambda a, r: a.at[d].set(r.astype(a.dtype)),
+                                hat_edge, row)
+        return (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t)
 
     @jax.jit
-    def dual(st, port_mask):
-        return trainer.dual_update(st, port_mask)
+    def dual(st, edge_mask):
+        return trainer.dual_update(st, edge_mask)
 
     return {"phase": phase, "apply": apply, "dual": dual}
 
@@ -304,13 +303,16 @@ def simulate_trainer(trainer, state0, batch, scfg: SimConfig,
     dcfg = trainer.dcfg
     assert dcfg.mode == "gauss-seidel" and not dcfg.overlap, \
         "the simulator models the two-phase gauss-seidel schedule"
+    assert dcfg.staleness == 0, \
+        "pass staleness via SimConfig: the simulator's per-message async " \
+        "schedule subsumes the trainer's in-step pipeline"
     topo = trainer.topo
     assert build_topology(scfg.topology, dcfg.num_workers).kind == topo.kind
     d = sum(int(np.prod(l.shape[1:]))
             for l in jax.tree.leaves(state0.theta))
     fns = _trainer_fns(trainer)
     keys = _beacon(state0.key, scfg.rounds)
-    st0 = (state0.theta, state0.theta_hat, state0.hat_nbr, state0.lam_nbr,
+    st0 = (state0.theta, state0.theta_hat, state0.hat_edge, state0.lam_edge,
            state0.radius, state0.bits, state0.opt_mu, state0.opt_nu,
            state0.opt_t)
 

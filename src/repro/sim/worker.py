@@ -36,14 +36,35 @@ quantizer is delta-coded: reconstruction of round k+1 requires the hat
 state after round k.  Dropped neighbors are detected via the network's
 peer-down notification; the actor stops waiting on them and freezes the
 shared edge's dual instead of integrating a stale residual forever.
+
+Async duals (S > 0).  Mixing the worker's *current* hat with whatever
+neighbor round happens to be applied makes the two endpoints of an edge
+integrate different residuals and their dual mirrors drift apart — the
+old behaviour froze such edges, which silences the duals entirely once
+the schedule is latency-bound and shifts the fixed point.  Instead each
+actor keeps an S-deep history of its own committed hat row and of every
+neighbor's reconstructed row, and the round-k dual step uses the
+*common round* k-S snapshot of both endpoints (the completion gate
+guarantees round k-S is applied).  This is exactly the
+``DistConfig.staleness`` pipeline's dual rule (dist.qgadmm._stale_round:
+``hat_lag`` vs the S-stale slab), so a latency-bound async run and the
+trainer's in-step pipeline share a fixed point.  S=0 keeps the original
+fresh-edge mask path bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _set_row(tree, idx, row):
+    """Functional row write: `tree` with stacked-dim row `idx` <- `row`."""
+    return jax.tree.map(lambda a, r: a.at[idx].set(r.astype(a.dtype)),
+                        tree, row)
 
 
 @dataclasses.dataclass
@@ -155,6 +176,7 @@ class BaseActor:
             if m.sent:
                 self._apply(j, m)
             self.nbr_round[j] += 1
+            self._post_advance(j, m.rnd)
         self._try_phase()
         self._try_complete()
 
@@ -175,6 +197,10 @@ class BaseActor:
 
     def _apply(self, j: int, msg: Msg) -> None:
         raise NotImplementedError
+
+    def _post_advance(self, j: int, rnd: int) -> None:
+        """Called after neighbor j's round-`rnd` message is folded in
+        (sent or censored) — subclasses record lag history here."""
 
     def _dual_update(self) -> None:
         raise NotImplementedError
@@ -210,12 +236,12 @@ class GraphActor(BaseActor):
         self.active = jnp.asarray(topo.head_mask if self.is_head
                                   else ~topo.head_mask)
         self.edge_alive = np.ones((topo.num_edges,), np.float32)
-        self._edge_of = {}
-        for e, (h, t) in enumerate(topo.edges):
-            if int(h) == self.i:
-                self._edge_of[int(t)] = e
-            elif int(t) == self.i:
-                self._edge_of[int(h)] = e
+        self._edge_of = topo.edge_lookup(self.i)
+        # S-deep lag histories for the async common-round dual (module
+        # docstring): round -> committed own row / reconstructed nbr row
+        self._own_hist: dict[int, Any] = {}
+        self._nbr_hist: dict[int, dict[int, Any]] = \
+            {j: {} for j in self.neighbors}
 
     def _phase_key(self):
         return self.keys[self.rnd][0 if self.is_head else 1]
@@ -243,15 +269,16 @@ class GraphActor(BaseActor):
     def _apply(self, j, msg):
         self.hat = self.fns["apply"](self.hat, j, msg.body["hat"])
 
+    def _post_advance(self, j, rnd):
+        if self.staleness > 0:
+            self._nbr_hist[j][rnd] = jax.tree.map(lambda a: a[j], self.hat)
+
     def _edge_mask(self) -> np.ndarray:
         """1.0 on live incident edges whose neighbor hat is round-fresh.
 
         Barriered (staleness 0) completion implies nbr_round[j] == rnd, so
-        the mask is all-ones there (bit-parity preserved; x*1.0 is exact).
-        In async mode a dual step is taken only when the edge has this
-        round's information — integrating a stale residual every local
-        round makes the per-endpoint dual copies drift apart and wrecks
-        the fixed point."""
+        the mask is all-ones there (bit-parity preserved; x*1.0 is exact)
+        and only drop-frozen edges are gated off."""
         mask = self.edge_alive.copy()
         for j, e in self._edge_of.items():
             if j not in self.dead and self.nbr_round[j] < self.rnd:
@@ -259,8 +286,29 @@ class GraphActor(BaseActor):
         return mask
 
     def _dual_update(self):
-        self.lam = self.fns["dual"](self.lam, self.hat,
-                                    jnp.asarray(self._edge_mask()))
+        if self.staleness == 0:
+            self.lam = self.fns["dual"](self.lam, self.hat,
+                                        jnp.asarray(self._edge_mask()))
+            return
+        # async: dual step on the round-(k-S) common snapshot of both
+        # endpoints (module docstring), gated off during the S fill rounds
+        self._own_hist[self.rnd] = jax.tree.map(lambda a: a[self.i],
+                                                self.hat)
+        lag = self.rnd - self.staleness
+        if lag >= 0:
+            hat_sub = _set_row(self.hat, self.i, self._own_hist[lag])
+            mask = self.edge_alive.copy()
+            for j, e in self._edge_of.items():
+                row = self._nbr_hist[j].get(lag)
+                if row is None:        # dead before round `lag` — frozen
+                    mask[e] = 0.0
+                else:
+                    hat_sub = _set_row(hat_sub, j, row)
+            self.lam = self.fns["dual"](self.lam, hat_sub,
+                                        jnp.asarray(mask))
+        for h in (self._own_hist, *self._nbr_hist.values()):
+            for r in [r for r in h if r < self.rnd - self.staleness]:
+                del h[r]
 
     def _peer_down_hook(self, j):
         e = self._edge_of.get(j)
@@ -299,10 +347,16 @@ class TrainerActor(BaseActor):
         self.quantize = trainer.dcfg.gadmm.quantize
         self.active = jnp.asarray(topo.head_mask if self.is_head
                                   else ~topo.head_mask)
-        # port c of worker i <-> neighbor topo.port[i, c]
-        self._port_of = {int(p): c for c, p in enumerate(topo.port[self.i])
-                         if p >= 0}
-        self.port_alive = np.asarray(topo.port >= 0, np.float32)
+        # neighbor j -> the directed slab row with dst=i that stores what i
+        # knows about j (the trainer's edge-indexed state layout)
+        self.eidx = trainer.eidx
+        self._in_edge = self.eidx.in_edges(self.i)
+        self.edge_alive = np.ones((self.eidx.num_directed,), np.float32)
+        # S-deep lag histories for the async common-round dual (module
+        # docstring): round -> committed own hat row / reconstructed slab row
+        self._own_hist: dict[int, Any] = {}
+        self._nbr_hist: dict[int, dict[int, Any]] = \
+            {j: {} for j in self.neighbors}
 
     def _phase_key(self):
         return self.keys[self.rnd][0 if self.is_head else 1]
@@ -325,30 +379,77 @@ class TrainerActor(BaseActor):
         return True, body, self.payload_bits
 
     def _apply(self, j, msg):
-        self.st = self.fns["apply"](self.st, self._port_of[j], self.i,
-                                    msg.body["hat"])
+        self.st = self.fns["apply"](
+            self.st, jnp.asarray(self._in_edge[j], jnp.int32),
+            msg.body["hat"])
+
+    def _post_advance(self, j, rnd):
+        if self.staleness > 0:
+            d = self._in_edge[j]
+            self._nbr_hist[j][rnd] = jax.tree.map(lambda a: a[d],
+                                                  self.st[2])
 
     def _dual_update(self):
-        # same fresh-edge gating as GraphActor._edge_mask (row i only; the
-        # other rows of the local view are don't-care)
-        mask = self.port_alive.copy()
-        for j, c in self._port_of.items():
-            if j not in self.dead and self.nbr_round[j] < self.rnd:
-                mask[self.i, c] = 0.0
-        self.st = self.fns["dual"](self.st, jnp.asarray(mask))
+        mask = self.edge_alive.copy()
+        if self.staleness == 0:
+            # same fresh-edge gating as GraphActor._edge_mask, on the
+            # directed slab rows with dst=i (the other rows of the local
+            # view are don't-care)
+            for j, d in self._in_edge.items():
+                if j not in self.dead and self.nbr_round[j] < self.rnd:
+                    mask[d] = 0.0
+            self.st = self.fns["dual"](self.st, jnp.asarray(mask))
+            return
+        # async: splice the round-(k-S) common snapshot (own hat row +
+        # in-edge slab rows) into a scratch state, take the dual step
+        # there, and keep only its lam_edge — this is the trainer
+        # pipeline's `hat_lag` dual rule (dist.qgadmm._stale_round)
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = self.st
+        self._own_hist[self.rnd] = jax.tree.map(lambda a: a[self.i], hat)
+        lag = self.rnd - self.staleness
+        if lag >= 0:
+            hat_sub = _set_row(hat, self.i, self._own_hist[lag])
+            hat_edge_sub = hat_edge
+            for j, d in self._in_edge.items():
+                row = self._nbr_hist[j].get(lag)
+                if row is None:        # dead before round `lag` — frozen
+                    mask[d] = 0.0
+                else:
+                    hat_edge_sub = _set_row(hat_edge_sub, d, row)
+            st_sub = (theta, hat_sub, hat_edge_sub, lam_edge, radius,
+                      bits, mu, nu, t)
+            lam_edge = self.fns["dual"](st_sub, jnp.asarray(mask))[3]
+            self.st = (theta, hat, hat_edge, lam_edge, radius, bits,
+                       mu, nu, t)
+        for h in (self._own_hist, *self._nbr_hist.values()):
+            for r in [r for r in h if r < self.rnd - self.staleness]:
+                del h[r]
 
     def _peer_down_hook(self, j):
-        self.port_alive = self.port_alive.copy()
-        self.port_alive[self.i, self._port_of[j]] = 0.0
+        self.edge_alive = self.edge_alive.copy()
+        self.edge_alive[self._in_edge[j]] = 0.0
 
     def _snapshot(self):
         import jax
-        (theta, hat, hat_nbr, lam_nbr, radius, bits, mu, nu, t) = self.st
+        (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = self.st
         row = lambda tree: jax.tree.map(
             lambda a: np.asarray(a[self.i]), tree)
+
+        def port_row(slab, c):
+            # slab row with dst=i and color c, or the zeros a missing port
+            # always held in the port-dense layout
+            s = int(self.eidx.slot[self.i, c])
+            if s < 0:
+                return jax.tree.map(
+                    lambda a: np.asarray(jnp.zeros_like(a[0])), slab)
+            return jax.tree.map(lambda a: np.asarray(a[s]), slab)
+
+        ports = self.topo.num_ports
         return dict(theta=row(theta), hat=row(hat),
-                    hat_nbr=tuple(row(h) for h in hat_nbr),
-                    lam_nbr=tuple(row(l) for l in lam_nbr),
+                    hat_nbr=tuple(port_row(hat_edge, c)
+                                  for c in range(ports)),
+                    lam_nbr=tuple(port_row(lam_edge, c)
+                                  for c in range(ports)),
                     radius=np.asarray(radius[self.i]),
                     bits=np.asarray(bits[self.i]),
                     sent=self.sent_log[-1])

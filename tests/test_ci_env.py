@@ -34,7 +34,8 @@ def test_property_modules_hard_fail_in_ci_without_hypothesis():
     """The property modules themselves must use the REPRO_CI-aware guard —
     plain importorskip would keep skipping even when the flag is set."""
     here = os.path.dirname(__file__)
-    for name in ("test_quantizer.py", "test_comm_model.py", "test_moe.py"):
+    for name in ("test_quantizer.py", "test_comm_model.py", "test_moe.py",
+                 "test_gadmm.py", "test_sim.py"):
         with open(os.path.join(here, name)) as f:
             src = f.read()
         assert "REPRO_CI" in src, (

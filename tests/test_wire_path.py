@@ -441,3 +441,194 @@ def test_wire_accounting_cross_check_comm_model():
         assert bits[pack] == measured_bits[pack], (pack, bits, measured_bits)
     assert e_packed == cm.tx_energy(measured_bits[True], 10.0, bw,
                                     radio.slot_s, radio.noise_psd)
+
+
+# ------------------------------------------------ golden bitwise replay ----
+def test_golden_state_bitwise():
+    """Cross-refactor acceptance: replaying the canonical topology x censor
+    x pack matrix reproduces tests/golden/wire_state_v1.npz — captured at
+    the pre-refactor (port-dense state) revision — BITWISE: every state
+    leaf (neighbor slabs projected to port views), dtype, shape, and wire
+    metric, with no keys missing or unaccounted for."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tools"))
+    import capture_golden_wire as gw
+
+    with np.load(gw.GOLDEN_PATH) as data:
+        golden = {k: data[k] for k in data.files}
+    seen = set()
+    for topology, censored, pack in gw.golden_cases():
+        tag = f"{topology}|c{int(censored)}|p{int(pack)}"
+        tr, state, metrics = gw.golden_run(topology, censored, pack)
+        for name, arr in gw.state_arrays(tr, state, metrics).items():
+            key = f"{tag}|{name}"
+            assert key in golden, f"missing golden key {key}"
+            assert golden[key].dtype == arr.dtype, key
+            assert golden[key].shape == arr.shape, key
+            np.testing.assert_array_equal(arr, golden[key], err_msg=key)
+            seen.add(key)
+    assert seen == set(golden), sorted(set(golden) - seen)[:5]
+
+
+# --------------------------------------------------- staleness pipeline ----
+@pytest.mark.parametrize("topology", ["chain", "star"])
+def test_staleness_accounting_closed_form_billed_at_send(topology):
+    """Satellite: the staleness-S pipeline bills wire bits on the round the
+    payload is SENT, never on the round it is consumed — so the censored
+    closed forms hold from round 0 onward, pipeline-fill rounds included
+    (a consume-billed scheme would report flag-only rounds while the ring
+    fills)."""
+    tiny = CensorConfig(tau=1e-20, xi=0.9)
+    huge = CensorConfig(tau=1e9, xi=0.999999)
+    for cen, expect_kind in ((tiny, "all"), (huge, "none")):
+        tr, state, batch = _setup(topology=topology, staleness=2, censor=cen)
+        topo = tr.topo
+        d = sum(int(np.prod(l.shape[1:]))
+                for l in jax.tree.leaves(state.theta))
+        per_link = 8 * tr.wire_row_bytes(d) + 32 + 32
+        e = topo.num_edges
+        deg = topo.degree
+        if expect_kind == "all":
+            expected = 2 * (2 * e * FLAG_BITS) + per_link * int(deg.sum())
+        else:
+            expected = 2 * (2 * e * FLAG_BITS)
+        step = jax.jit(tr.make_train_step())
+        for k in range(3):  # rounds 0 and 1 are pipeline fill at S=2
+            state, m = step(state, batch)
+            assert int(m["wire_bits_per_round"]) == expected, (
+                topology, expect_kind, k)
+            assert float(m["skip_rate"]) == (0.0 if expect_kind == "all"
+                                             else 1.0), (topology, k)
+
+
+def test_staleness_accounting_cross_check_sim_per_message():
+    """Satellite: the trainer's flag-sideband billing reconciles with
+    repro.sim's per-message unicast accounting, round by round.
+
+    The sim (unicast, lossless) charges each transmitting worker per_link
+    bits per neighbor and each censored worker FLAG_BITS per neighbor; the
+    trainer bills flags on ALL 2E directed links in both phases plus the
+    payload per sender degree.  Feeding the sim's recorded sent flags into
+    the trainer's accounting, the two differ by exactly the flag bits of
+    the silent directed links:
+
+        billed - sim_round == FLAG_BITS * (4E - sum_silent deg)
+
+    and the event timeline's total tx bits equal the per-message model."""
+    from repro.sim.network import ComputeModel, NetworkConfig
+    from repro.sim.runner import (SimConfig, simulate_trainer,
+                                  trainer_link_bits)
+
+    rounds = 6
+    tr, state, batch = _setup(topology="chain",
+                              censor=CensorConfig(tau=0.5, xi=0.95))
+    topo = tr.topo
+    d = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(state.theta))
+    per_link = trainer_link_bits(tr, d)
+    scfg = SimConfig(topology="chain", rounds=rounds, staleness=2, seed=0,
+                     network=NetworkConfig(transport="unicast",
+                                           latency_s=1e-3),
+                     compute=ComputeModel(base_s=1e-3))
+    res = simulate_trainer(tr, state, batch, scfg)
+    heads = np.asarray(topo.head_mask)
+    deg = np.asarray(topo.degree)
+    e = topo.num_edges
+    model_total = 0.0
+    for k in range(rounds):
+        sent = np.array([bool(res.states[k][w]["sent"]) for w in range(4)])
+        billed = float(tr.wire_bits_per_round(
+            state.theta, [jnp.asarray(sent & heads),
+                          jnp.asarray(sent & ~heads)]))
+        sim_round = (per_link * float(deg[sent].sum())
+                     + FLAG_BITS * float(deg[~sent].sum()))
+        model_total += sim_round
+        assert billed - sim_round == FLAG_BITS * (
+            4 * e - float(deg[~sent].sum())), k
+    assert sum(t.bits for t in res.timeline.tx) == model_total
+    assert any(not res.states[k][w]["sent"]
+               for k in range(rounds) for w in range(4)), \
+        "censor never fired: the cross-check only exercised the all-sent row"
+
+
+def test_staleness2_trainer_matches_sim_async_objective():
+    """Acceptance: a DistConfig.staleness=2 trainer run matches the
+    corresponding repro.sim async (SimConfig.staleness=2) run within 1e-3
+    relative objective gap.  Both integrate the round-(k-S) dual residual
+    (trainer: hat_lag pipeline; sim: common-round lag histories), so they
+    share the consensus fixed point; the damped alpha keeps the S-delayed
+    dual iteration stable and the quantization noise ball contracts as the
+    hats converge."""
+    from repro.sim.network import ComputeModel, NetworkConfig
+    from repro.sim.runner import SimConfig, simulate_trainer
+
+    class LinReg:
+        @staticmethod
+        def init(key, cfg):
+            return {"w": 0.01 * jax.random.normal(key, (8,)),
+                    "b": jnp.zeros(())}
+
+        @staticmethod
+        def loss_fn(params, batch, cfg):
+            pred = batch["x"] @ params["w"] + params["b"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+    w = 4
+    steps = 150
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=8)
+    x = rng.normal(size=(w, 32, 8))
+    y = x @ w_true + 0.1 * rng.normal(size=(w, 32))
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    xf, yf = jnp.asarray(x.reshape(-1, 8)), jnp.asarray(y.reshape(-1))
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("worker", "fsdp", "model"))
+    gcfg = GADMMConfig(rho=0.1, quantize=True,
+                       qcfg=QuantizerConfig(bits=4), alpha=0.1)
+
+    def objective(theta):
+        wbar, bbar = jnp.mean(theta["w"], axis=0), jnp.mean(theta["b"])
+        return float(jnp.mean((xf @ wbar + bbar - yf) ** 2))
+
+    dcfg = DistConfig(num_workers=w, topology="chain", staleness=2,
+                      gadmm=gcfg, local_iters=5, local_lr=5e-2)
+    tr = QGADMMTrainer(LinReg, None, dcfg, mesh)
+    st = init_state(lambda k: LinReg.init(k, None), jax.random.PRNGKey(0),
+                    dcfg)
+    step = jax.jit(tr.make_train_step())
+    for _ in range(steps):
+        st, _ = step(st, batch)
+    o_trainer = objective(st.theta)
+
+    dcfg0 = DistConfig(num_workers=w, topology="chain", gadmm=gcfg,
+                       local_iters=5, local_lr=5e-2)
+    tr0 = QGADMMTrainer(LinReg, None, dcfg0, mesh)
+    st0 = init_state(lambda k: LinReg.init(k, None), jax.random.PRNGKey(0),
+                     dcfg0)
+    scfg = SimConfig(topology="chain", rounds=steps, staleness=2, seed=0,
+                     network=NetworkConfig(latency_s=1e-3, jitter_s=1e-3),
+                     compute=ComputeModel(base_s=1e-3, straggler={1: 4.0}))
+    res = simulate_trainer(tr0, st0, batch, scfg)
+    last = res.states[-1]
+    theta_sim = {k: jnp.asarray(np.stack(
+        [np.asarray(last[i]["theta"][k]) for i in range(w)]))
+        for k in ("w", "b")}
+    o_sim = objective(theta_sim)
+    rel_gap = abs(o_trainer - o_sim) / max(abs(o_sim), 1e-12)
+    assert rel_gap < 1e-3, (o_trainer, o_sim, rel_gap)
+
+
+# ------------------------------------------------- degenerate graphs -------
+def test_single_worker_degenerate_trains():
+    """W=1 (no edges): the trainer must run the no-exchange path — zero
+    wire traffic, zero consensus residual, finite loss — and staleness>0
+    must fall back to the barriered step (a 1-worker pipeline has nothing
+    in flight)."""
+    for staleness in (0, 1):
+        tr, state, batch = _setup(w=1, staleness=staleness)
+        assert tr.topo.num_edges == 0
+        state, m = _run(tr, state, batch, steps=2)
+        assert np.isfinite(float(m["loss"]))
+        assert float(m["wire_bits_per_round"]) == 0.0
+        assert float(m["consensus_resid"]) == 0.0
