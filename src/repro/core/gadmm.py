@@ -320,30 +320,29 @@ def make_graph_quadratic(xs: Array, ys: Array, rho: float, topo) -> Quadratic:
     return Quadratic(xtx=xtx, xty=xty, minv=minv)
 
 
-def graph_consts(topo):
+def graph_consts(topo, layout: str = "edge"):
     """Static jnp views of the topology used inside the jitted step.
 
-    Carries BOTH state layouts: the dense port-style operators (``adj``,
-    ``inc`` — O(N^2) / O(N*E) aggregation work) and the O(E) directed
-    edge-index arrays from ``topology.edge_index`` (``d_src``/``d_dst``/
-    ``d_edge``, sorted by (dst, src)).  ``_graph_solve_all`` aggregates
-    through either; they are bitwise-identical on CPU (property-tested in
-    tests/test_gadmm.py) because the segment_sum adds each worker's
-    neighbor terms in the same ascending order the dense row reduction
-    uses."""
+    Always carries the O(E) directed edge-index arrays from
+    ``topology.edge_index`` (``d_src``/``d_dst``/``d_edge``, sorted by
+    (dst, src)).  The dense port-style operators (``adj``, ``inc`` —
+    O(N^2) / O(N*E) memory and aggregation work) are materialized only
+    when ``layout='port'`` asks for them: at production worker counts
+    (10^4+) the dense matrices alone would dwarf the model state, and the
+    edge layout never touches them.  The two layouts are
+    bitwise-identical on CPU (property-tested in tests/test_gadmm.py)
+    because the segment_sum adds each worker's neighbor terms in the same
+    ascending order the dense row reduction uses."""
     import numpy as np
 
     from .topology import edge_index
 
     n = topo.n
-    inc = np.zeros((n, max(topo.num_edges, 1)), np.float32)
-    for e, (h, t) in enumerate(topo.edges):
-        inc[h, e] = inc[t, e] = 1.0
     eidx = edge_index(topo)
-    return dict(
+    tc = dict(
         head=jnp.asarray(topo.head_mask),
-        adj=jnp.asarray(topo.adjacency(), jnp.float32),
-        inc=jnp.asarray(inc),
+        adj=None,
+        inc=None,
         e_head=jnp.asarray(topo.edges[:, 0] if topo.num_edges else
                            np.zeros((0,), np.int64)),
         e_tail=jnp.asarray(topo.edges[:, 1] if topo.num_edges else
@@ -353,6 +352,13 @@ def graph_consts(topo):
         d_dst=jnp.asarray(eidx.dst),
         d_edge=jnp.asarray(eidx.edge),
     )
+    if layout == "port":
+        inc = np.zeros((n, max(topo.num_edges, 1)), np.float32)
+        for e, (h, t) in enumerate(topo.edges):
+            inc[h, e] = inc[t, e] = 1.0
+        tc["adj"] = jnp.asarray(topo.adjacency(), jnp.float32)
+        tc["inc"] = jnp.asarray(inc)
+    return tc
 
 
 _graph_consts = graph_consts  # pre-PR-4 name
@@ -376,6 +382,8 @@ def _graph_solve_all(q: Quadratic, lam: Array, hat: Array, rho: float,
     """
     sign = jnp.where(tc["head"], 1.0, -1.0)[:, None]
     if layout == "port":
+        assert tc["adj"] is not None, \
+            "layout='port' needs graph_consts(topo, layout='port')"
         lam_sum = tc["inc"] @ lam if lam.shape[0] else jnp.zeros_like(hat)
         nbr_sum = tc["adj"] @ hat
     else:
@@ -461,7 +469,7 @@ def graph_step(state: GraphState, q: Quadratic, cfg: GADMMConfig, topo,
     O(E) segment_sum default) or 'port' (pre-refactor dense operators) —
     bitwise-identical on CPU, property-tested in tests/test_gadmm.py.
     """
-    tc = graph_consts(topo)
+    tc = graph_consts(topo, layout=layout)
     is_head = tc["head"]
     key, k_h, k_t = jax.random.split(state.key, 3)
 

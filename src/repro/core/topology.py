@@ -19,7 +19,11 @@ This module provides that generalization:
     hard-coded ``+-1`` chain shifts.
   * builders — ``chain_topology`` / ``ring_topology`` / ``star_topology`` /
     ``torus2d_topology`` / ``bipartite_topology`` (arbitrary edge lists,
-    validated connected + 2-colorable).
+    validated connected + 2-colorable) / ``cluster_of_stars_topology``
+    (two-tier leader-leaf hierarchies: per-cluster stars over a chain or
+    super-hub leader backbone — the L-FGADMM federated shape, still a
+    connected bipartite graph so coloring and ``edge_index`` apply
+    unchanged).
   * ``Placement`` — worker coordinates plus a ``Topology``;
     ``broadcast_dist`` dispatches on the topology (a worker's transmit power
     is set by its FARTHEST neighbor, e.g. the star hub must reach its
@@ -329,6 +333,58 @@ def bipartite_topology(n: int, edges) -> Topology:
     return _make("bipartite", n, edges)
 
 
+def _cluster_bounds(n: int, clusters: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split n workers into ``clusters`` contiguous id ranges, sizes as
+    equal as possible (first ``n % clusters`` ranges get one extra)."""
+    sizes = np.full(clusters, n // clusters, np.int64)
+    sizes[: n % clusters] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return starts, sizes
+
+
+def default_clusters(n: int) -> int:
+    """Cluster-count heuristic for the two-tier builders: ~sqrt(n) leaders
+    balances backbone depth against per-leader fan-out (n = 10^4 -> 100
+    clusters of 100)."""
+    return max(1, int(round(np.sqrt(n))))
+
+
+def cluster_of_stars_topology(n: int, clusters: int | None = None,
+                              backbone: str = "chain") -> Topology:
+    """Two-tier hierarchical graph: per-cluster stars joined by a leader
+    backbone (the L-FGADMM federated leader-leaf composition).
+
+    Workers are split into ``clusters`` contiguous id ranges; the first id
+    of each range is the cluster leader and its remaining ids are leaves
+    (a star).  Leaders are then joined by a ``backbone``:
+
+      * ``'chain'`` — leaders form a chain (kind ``cluster_of_stars``);
+      * ``'star'``  — leaders all connect to leader 0, the super-hub
+        (kind ``federated`` — the PS-like two-tier shape).
+
+    Both compositions are trees of stars, hence connected and bipartite,
+    so the existing BFS 2-coloring, Koenig edge coloring, and
+    ``edge_index`` apply unchanged.  ``clusters=None`` picks
+    ``default_clusters(n)`` (~sqrt(n)).
+    """
+    assert n >= 2
+    c = default_clusters(n) if clusters is None else int(clusters)
+    assert 1 <= c <= n, f"need 1 <= clusters <= n, got {c} for n={n}"
+    assert backbone in ("chain", "star"), backbone
+    starts, sizes = _cluster_bounds(n, c)
+    edges: list[tuple[int, int]] = []
+    for s, sz in zip(starts.tolist(), sizes.tolist()):
+        edges.extend((s, s + j) for j in range(1, sz))
+    if backbone == "chain":
+        kind = "cluster_of_stars"
+        edges.extend((int(starts[j]), int(starts[j + 1]))
+                     for j in range(c - 1))
+    else:
+        kind = "federated"
+        edges.extend((int(starts[0]), int(starts[j])) for j in range(1, c))
+    return _make(kind, n, edges, prefer_head=0)
+
+
 def _torus_dims(n: int) -> tuple[int, int]:
     """Most-square even x even factorization of n (requires n % 4 == 0)."""
     assert n % 4 == 0, f"2d-torus needs num_workers % 4 == 0, got {n}"
@@ -341,7 +397,8 @@ def _torus_dims(n: int) -> tuple[int, int]:
     return best
 
 
-TOPOLOGY_KINDS = ("chain", "ring", "star", "torus2d")
+TOPOLOGY_KINDS = ("chain", "ring", "star", "torus2d",
+                  "cluster_of_stars", "federated")
 
 
 def build_topology(kind_or_topo, n: int) -> Topology:
@@ -359,11 +416,21 @@ def build_topology(kind_or_topo, n: int) -> Topology:
         return star_topology(n)
     if kind == "torus2d":
         return torus2d_topology(*_torus_dims(n))
+    if kind == "cluster_of_stars":
+        return cluster_of_stars_topology(n)
+    if kind == "federated":
+        return cluster_of_stars_topology(n, backbone="star")
     raise ValueError(f"unknown topology {kind!r}; expected one of "
                      f"{TOPOLOGY_KINDS} or a Topology instance")
 
 
 # --------------------------------------------------------------- placement --
+# Above this worker count the placement helpers switch from the paper's
+# O(N^2) heuristics (nearest-neighbor chain walk, full pairwise matrix) to
+# O(N) equivalents; small-N results are bit-identical to the pre-gate code.
+DENSE_PLACEMENT_MAX = 1024
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class Placement:
     positions: np.ndarray       # (N, 2) worker coordinates in meters
@@ -387,6 +454,17 @@ class Placement:
                       for j in range(self.n - 1)],
                      prefer_head=int(order[0]) if self.n else None)
 
+    def edge_dists(self) -> np.ndarray:
+        """(E,) meters per undirected topology edge, in ``topo.edges``
+        order — the only pairwise distances the network model ever needs
+        (O(E), never the O(N^2) full matrix)."""
+        topo = self.resolved_topology()
+        e = topo.edges
+        if not len(e):
+            return np.zeros((0,))
+        return np.linalg.norm(self.positions[e[:, 0]] - self.positions[e[:, 1]],
+                              axis=1)
+
     def broadcast_dist(self) -> np.ndarray:
         """Per-worker transmit distance: the FARTHEST topology neighbor.
 
@@ -395,15 +473,15 @@ class Placement:
         topology (the old implementation silently assumed chain ordering):
         on a star the hub must reach its farthest leaf (PS-downlink-like),
         on a ring/torus each worker looks at its cycle/grid neighbors.
-        Returned in worker-id order (index i = worker i).
+        Returned in worker-id order (index i = worker i).  Vectorized as a
+        segment max over the per-edge distances (O(E)).
         """
         topo = self.resolved_topology()
         out = np.zeros(self.n)
-        for i in range(self.n):
-            nbrs = topo.neighbors(i)
-            if len(nbrs):
-                out[i] = np.linalg.norm(
-                    self.positions[nbrs] - self.positions[i], axis=1).max()
+        if topo.num_edges:
+            d = self.edge_dists()
+            np.maximum.at(out, topo.edges[:, 0], d)
+            np.maximum.at(out, topo.edges[:, 1], d)
         return out
 
 
@@ -418,20 +496,31 @@ def random_placement(n: int, seed: int, grid: float = 250.0,
     """
     rng = np.random.default_rng(seed)
     pos = rng.uniform(0.0, grid, size=(n, 2))
-    # nearest-neighbor chain heuristic
-    start = int(np.argmin(pos.sum(axis=1)))
-    unvisited = set(range(n)) - {start}
-    chain = [start]
-    while unvisited:
-        last = pos[chain[-1]]
-        nxt = min(unvisited, key=lambda j: float(np.sum((pos[j] - last) ** 2)))
-        chain.append(nxt)
-        unvisited.remove(nxt)
-    chain = np.asarray(chain)
+    if n > DENSE_PLACEMENT_MAX:
+        # Large-N path, O(N): the nearest-neighbor chain walk and the full
+        # pairwise matrix are both O(N^2) and unusable at 10^4+ workers.
+        # Chain = id order; PS = the worker nearest the centroid (the
+        # min-sum-distance worker converges to it for uniform drops).
+        chain = np.arange(n)
+        ps = int(np.argmin(np.linalg.norm(pos - pos.mean(axis=0), axis=1)))
+        ps_dist = np.linalg.norm(pos - pos[ps], axis=1)
+    else:
+        # nearest-neighbor chain heuristic
+        start = int(np.argmin(pos.sum(axis=1)))
+        unvisited = set(range(n)) - {start}
+        chain = [start]
+        while unvisited:
+            last = pos[chain[-1]]
+            nxt = min(unvisited,
+                      key=lambda j: float(np.sum((pos[j] - last) ** 2)))
+            chain.append(nxt)
+            unvisited.remove(nxt)
+        chain = np.asarray(chain)
+        # PS = min sum distance to all others
+        dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
+        ps = int(np.argmin(dmat.sum(axis=1)))
+        ps_dist = dmat[ps]
     hop = np.linalg.norm(pos[chain[1:]] - pos[chain[:-1]], axis=1)
-    # PS = min sum distance to all others
-    dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
-    ps = int(np.argmin(dmat.sum(axis=1)))
 
     if topology == "chain":
         topo = _make("chain", n, [(int(chain[j]), int(chain[j + 1]))
@@ -457,6 +546,9 @@ def random_placement(n: int, seed: int, grid: float = 250.0,
                 edges.append((int(grid_ids[r, c]),
                               int(grid_ids[(r + 1) % rows, c])))
         topo = _make("torus2d", n, edges)
+    elif topology in ("cluster_of_stars", "federated"):
+        topo = cluster_of_stars_topology(
+            n, backbone="chain" if topology == "cluster_of_stars" else "star")
     else:
         raise ValueError(f"unknown topology {topology!r}")
 
@@ -465,7 +557,7 @@ def random_placement(n: int, seed: int, grid: float = 250.0,
         chain=chain,
         ps_index=ps,
         chain_hop_dist=hop,
-        ps_dist=dmat[ps],
+        ps_dist=ps_dist,
         topology=topo,
     )
 

@@ -168,6 +168,23 @@ class DistConfig:
                  duals fresh-edge-gated onto matching S-stale snapshots
                  (the trainer promotion of repro.sim's bounded-staleness
                  async schedule; see the module docstring).
+    participation: per-round Bernoulli rate of each worker taking part
+                 (1.0 = everyone, the default — that path is bitwise
+                 identical to the pre-participation trainer).  Each round
+                 draws a (W,) mask by folding a constant into the round
+                 key (every worker derives the same mask — shared setup
+                 knowledge, no extra wire traffic).  An absent worker
+                 skips its local iterations and transmits nothing; its
+                 neighbors drop the frozen hat from their neighbor sums
+                 with degree-renormalized weights (deg / #participating
+                 neighbors — exactly 1.0 whenever everyone is present,
+                 so fully-present rounds are unbiased AND bit-stable),
+                 and an edge's dual updates only when BOTH endpoints
+                 participate, keeping the lam mirrors synchronized.
+                 Composes with censoring (absent != censored: a censored
+                 worker computed but stayed silent) and with the
+                 staleness pipeline (the mask gates the round's compute
+                 and its in-flight payload alike).
     """
 
     num_workers: int
@@ -186,8 +203,10 @@ class DistConfig:
     topology: Any = "chain"
     censor: CensorConfig | None = None
     staleness: int = 0
+    participation: float = 1.0
 
     def __post_init__(self):
+        assert 0.0 < self.participation <= 1.0, self.participation
         assert self.mode in ("gauss-seidel", "jacobi"), self.mode
         assert self.radius_mode in ("global", "per_tensor"), self.radius_mode
         build_topology(self.topology, self.num_workers)  # validate early
@@ -801,11 +820,17 @@ class QGADMMTrainer:
                        in_shardings=(ss, bs), out_shardings=(ss, None))
 
     def phase_compute(self, st, batch, active, key, step_idx,
-                      sharded: bool = False):
+                      sharded: bool = False, port_weights=None):
         """Local Adam + quantize (+ censor) for the active workers;
         returns the updated state and the wire payload (exchange NOT yet
         applied).  payload['sent'] is the per-worker transmit flag — the
         1-bit censor sideband that rides every link.
+
+        `port_weights` (W, C) overrides the 0/1 port mask weighting the
+        neighbor dual/prox terms of the local loss — partial
+        participation passes degree-renormalized weights that drop
+        absent neighbors' frozen hats (None = self.pmask, the full
+        topology).
 
         Worker row w of every output depends only on row w of the inputs
         (plus the shared uniform-draw key), so a single worker can replay
@@ -814,13 +839,14 @@ class QGADMMTrainer:
         g = self.dcfg.gadmm
         cc = self.dcfg.censor
         w = self.dcfg.num_workers
+        pw = self.pmask if port_weights is None else port_weights
         (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
         # project the edge slabs to the per-(worker, color) port views the
         # per-worker local loss is written against (exact; see _port_view)
         hat_nbr = self._port_view(hat_edge)
         lam_nbr = self._port_view(lam_edge)
         new_theta, new_mu, new_nu, new_t, f0 = jax.vmap(self._local_opt)(
-            theta, mu, nu, t, batch, lam_nbr, hat_nbr, self.pmask, self.sign)
+            theta, mu, nu, t, batch, lam_nbr, hat_nbr, pw, self.sign)
         theta = _twhere(active, new_theta, theta)
         mu = _twhere(active, new_mu, mu)
         nu = _twhere(active, new_nu, nu)
@@ -970,6 +996,30 @@ class QGADMMTrainer:
         phase_apply = functools.partial(self.phase_apply, sharded=sharded)
         dual_update = functools.partial(self.dual_update, sharded=sharded)
 
+        port_idx = jnp.asarray(topo.port, jnp.int32) if ports else None
+
+        def participation_masks(round_key):
+            """Per-round shared-knowledge participation draw: (W,) bool
+            mask, degree-renormalized (W, C) port weights, and the (2E,)
+            both-endpoints edge gate.  Derived by fold_in from the round
+            key (NOT by splitting it) so the participation=1.0 key
+            stream — and every committed golden — is untouched."""
+            part = jax.random.bernoulli(
+                jax.random.fold_in(round_key, 0x9A77), dcfg.participation,
+                (w,))
+            if port_idx is None:
+                return part, self.pmask, None
+            nbr_part = (part[jnp.maximum(port_idx, 0)].astype(jnp.float32)
+                        * self.pmask)                          # (W, C)
+            deg = jnp.sum(self.pmask, axis=1)
+            present = jnp.sum(nbr_part, axis=1)
+            pw = nbr_part * (deg / jnp.maximum(present, 1.0))[:, None]
+            edge_part = None
+            if self.eidx.num_directed:
+                edge_part = (part[self._d_src]
+                             & part[self._d_dst]).astype(jnp.float32)
+            return part, pw, edge_part
+
         def step(state: DistState, batch):
             key, k1, k2 = jax.random.split(state.key, 3)
             st = (state.theta, state.theta_hat, state.hat_edge,
@@ -977,10 +1027,14 @@ class QGADMMTrainer:
                   state.opt_nu, state.opt_t)
             sent_phases = []
             inbox, hat_lag = state.inbox, state.hat_lag
+            part = pw = edge_part = None
+            if dcfg.participation < 1.0:
+                part, pw, edge_part = participation_masks(state.key)
+            mask = (lambda a: a) if part is None else (lambda a: a & part)
 
             def phase(st, active, k):
-                st, payload, f0 = phase_compute(st, batch, active, k,
-                                                state.step)
+                st, payload, f0 = phase_compute(st, batch, mask(active), k,
+                                                state.step, port_weights=pw)
                 sent_phases.append(payload["sent"])
                 if exchange is not None:
                     st = phase_apply(st, exchange(payload))
@@ -996,7 +1050,8 @@ class QGADMMTrainer:
                 # the round the payload is sent — never on the round it is
                 # eventually consumed.
                 st, hat_lag, f0, sent_phases, inbox = self._stale_round(
-                    st, batch, state, hat_lag, k1, k2, sharded)
+                    st, batch, state, hat_lag, k1, k2, sharded,
+                    part=part, port_weights=pw, edge_part=edge_part)
             elif dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
                 # double-buffered exchange: put the heads' payload on the
                 # wire, run the tails' local iterations against the PREVIOUS
@@ -1004,23 +1059,23 @@ class QGADMMTrainer:
                 # exchanges in.  XLA sees no data dependence between the
                 # heads' ppermute and the tails' compute, so the graph
                 # latency hides behind the Adam iterations.
-                st, pl_h, f0 = phase_compute(st, batch, is_head, k1,
-                                             state.step)
+                st, pl_h, f0 = phase_compute(st, batch, mask(is_head), k1,
+                                             state.step, port_weights=pw)
                 sent_phases.append(pl_h["sent"])
                 recv_h = exchange(pl_h)
-                st, pl_t, _ = phase_compute(st, batch, ~is_head, k2,
-                                            state.step)
+                st, pl_t, _ = phase_compute(st, batch, mask(~is_head), k2,
+                                            state.step, port_weights=pw)
                 sent_phases.append(pl_t["sent"])
                 st = phase_apply(st, recv_h)
                 st = phase_apply(st, exchange(pl_t))
-                st = dual_update(st)
+                st = dual_update(st, edge_mask=edge_part)
             elif dcfg.mode == "gauss-seidel" and w > 1:
                 st, f0 = phase(st, is_head, k1)
                 st, _ = phase(st, ~is_head, k2)
-                st = dual_update(st)
+                st = dual_update(st, edge_mask=edge_part)
             else:
                 st, f0 = phase(st, all_on, k1)
-                st = dual_update(st)
+                st = dual_update(st, edge_mask=edge_part)
             (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t) = st
 
             # consensus violation, each edge counted once (from its head:
@@ -1047,7 +1102,10 @@ class QGADMMTrainer:
                 "skip_rate": 1.0 - sent_total / w,
                 "wire_bits_per_round": jnp.asarray(
                     self.wire_bits_per_round(
-                        theta, sent_phases if cc is not None else None),
+                        theta,
+                        sent_phases
+                        if (cc is not None or dcfg.participation < 1.0)
+                        else None),
                     jnp.float32),
             }
             new_state = DistState(
@@ -1074,13 +1132,20 @@ class QGADMMTrainer:
             treedef, [l.astype(r.dtype) for l, r in zip(ls, leaves)])
 
     def _stale_round(self, st, batch, state: DistState, hat_lag, k1, k2,
-                     sharded: bool):
+                     sharded: bool, part=None, port_weights=None,
+                     edge_part=None):
         """One staleness-S round: recv-done on the oldest inbox entry, both
         compute phases against the S-stale hats, fresh-edge-gated dual
-        update on matching S-stale snapshots, send into the ring."""
+        update on matching S-stale snapshots, send into the ring.  With
+        partial participation the round's shared mask gates the compute
+        phases (`part`), reweights the neighbor sums (`port_weights`) and
+        joins the fresh-edge gate on the dual (`edge_part`) — absent
+        workers push a sent=False entry into the ring, so their slot is
+        silent when it reaches recv-done S rounds later."""
         dcfg = self.dcfg
         s_depth = dcfg.staleness
-        phase_compute = functools.partial(self.phase_compute, sharded=sharded)
+        phase_compute = functools.partial(self.phase_compute, sharded=sharded,
+                                          port_weights=port_weights)
 
         # ---- recv-done: decode the round-(k-S) entry -----------------
         entry = jax.tree.map(lambda a: a[0], state.inbox)
@@ -1103,8 +1168,10 @@ class QGADMMTrainer:
         st = (theta, hat, hat_edge, lam_edge, radius, bits, mu, nu, t)
 
         # ---- compute: both phases against the S-stale hats -----------
-        st, pl_h, f0 = phase_compute(st, batch, self.is_head, k1, state.step)
-        st, pl_t, _ = phase_compute(st, batch, ~self.is_head, k2, state.step)
+        act_h = self.is_head if part is None else self.is_head & part
+        act_t = ~self.is_head if part is None else ~self.is_head & part
+        st, pl_h, f0 = phase_compute(st, batch, act_h, k1, state.step)
+        st, pl_t, _ = phase_compute(st, batch, act_t, k2, state.step)
         sent_phases = [pl_h["sent"], pl_t["sent"]]
 
         # ---- dual: S-stale own hat vs S-stale neighbor hat, gated off
@@ -1115,6 +1182,8 @@ class QGADMMTrainer:
         fresh = (state.step >= s_depth).astype(jnp.float32)
         if self.eidx.num_directed:
             coef = self._d_sign * fresh
+            if edge_part is not None:
+                coef = coef * edge_part
             scale = dcfg.gadmm.alpha * dcfg.gadmm.rho
             own = jax.tree.map(lambda a: a[self._d_dst], hat_lag)
             lam_edge = jax.tree.map(

@@ -127,7 +127,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                  wire_impl: str = "jnp", reduced: bool = False,
                  topology: str = "chain",
                  censor: CensorConfig | None = None,
-                 staleness: int = 0):
+                 staleness: int = 0, participation: float = 1.0):
     cfg = registry.get_config(
         arch, smoke=reduced, compute_dtype=jnp.bfloat16,
         param_dtype=jnp.float32, xent_mode=xent, attn_scan_remat=attn_remat,
@@ -146,7 +146,7 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
         local_iters=local_iters, microbatches=microbatches, mode=mode,
         state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
         seq_shard=seq_shard, wire_impl=wire_impl, topology=topology,
-        censor=censor, staleness=staleness)
+        censor=censor, staleness=staleness, participation=participation)
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
     state_structs = jax.eval_shape(
         functools.partial(init_state,
@@ -322,6 +322,10 @@ def main(argv=None):
                     help="S>0 compiles the pipelined exchange (send / "
                          "recv-start / recv-done over an S-deep in-flight "
                          "ring) instead of the per-color barrier")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="<1 compiles the partial-participation step "
+                         "(per-round Bernoulli masks, renormalized "
+                         "neighbor sums)")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke configs on 16-device meshes: records the "
                          "full 33-pair matrix on CPU (committed artifacts)")
@@ -361,7 +365,8 @@ def main(argv=None):
                                  censor=(CensorConfig(tau=args.censor_tau,
                                                       xi=args.censor_xi)
                                          if args.censor else None),
-                                 staleness=args.staleness)
+                                 staleness=args.staleness,
+                                 participation=args.participation)
             else:
                 r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
                                  windowed_cache=args.windowed_cache,

@@ -12,6 +12,9 @@ asynchrony.
       --censor --loss 0.05 --straggler 1:10 --bandwidth 2e6
   PYTHONPATH=src python -m repro.launch.simulate --async-staleness 2 \\
       --drop 2:40 --transport unicast --out sim.json
+  PYTHONPATH=src python -m repro.launch.simulate --engine vectorized \\
+      --topology cluster_of_stars --workers 10000 --participation 0.5 \\
+      --loss 0.05 --latency 1e-3 --rounds 100 --no-record-states
 """
 from __future__ import annotations
 
@@ -84,6 +87,21 @@ def main(argv=None):
                     metavar="W:ROUND",
                     help="worker W goes silent before round ROUND "
                          "(repeatable)")
+    ap.add_argument("--join", action="append", default=None,
+                    metavar="W:ROUND",
+                    help="worker W joins at round ROUND (absent and silent "
+                         "before it; repeatable)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-round Bernoulli participation rate in (0, 1]")
+    ap.add_argument("--engine", default="events",
+                    choices=["events", "vectorized"],
+                    help="events = per-message loop (bitwise oracle); "
+                         "vectorized = large-N array fast path "
+                         "(graph mode, staleness 0, no drops)")
+    ap.add_argument("--no-record-states", dest="record_states",
+                    action="store_false", default=True,
+                    help="skip per-round state snapshots (large N; the "
+                         "objective trace is still recorded)")
     ap.add_argument("--async-staleness", type=int, default=0,
                     help="bounded staleness S; 0 = barriered lockstep")
     ap.add_argument("--target", type=float, default=1e-4,
@@ -110,6 +128,8 @@ def main(argv=None):
     scfg = SimConfig(
         topology=args.topology, rounds=args.rounds,
         staleness=args.async_staleness, seed=args.seed,
+        participation=args.participation, engine=args.engine,
+        record_states=args.record_states,
         radio=cm.RadioConfig(total_bandwidth_hz=args.bandwidth,
                              n_workers=n),
         network=NetworkConfig(latency_s=args.latency, jitter_s=args.jitter,
@@ -120,16 +140,21 @@ def main(argv=None):
                              jitter_sigma=args.compute_jitter,
                              straggler=_parse_pairs(args.straggler,
                                                     "straggler")),
-        faults=FaultPlan(drop_round={k: int(v) for k, v in
-                                     _parse_pairs(args.drop, "drop").items()}))
+        faults=FaultPlan(
+            drop_round={k: int(v) for k, v in
+                        _parse_pairs(args.drop, "drop").items()},
+            join_round={k: int(v) for k, v in
+                        _parse_pairs(args.join, "join").items()}))
     res = simulate(xs, ys, gcfg, scfg, censor=censor)
     tt = res.to_rel_target(args.target)
     s = res.summary()
     skip = (1.0 - float(np.mean([st["sent"].mean() for st in res.states]))
             if res.states else 0.0)
 
-    print(f"== repro.sim: {args.topology} x {n} workers, {args.rounds} "
-          f"rounds, staleness {args.async_staleness} ==")
+    print(f"== repro.sim[{args.engine}]: {args.topology} x {n} workers, "
+          f"{args.rounds} rounds, staleness {args.async_staleness}"
+          + (f", participation {args.participation:g}"
+             if args.participation < 1.0 else "") + " ==")
     print(f"  channel: {args.transport}, {args.bandwidth/1e6:g} MHz, "
           f"loss {args.loss:g}, latency {args.latency:g}s"
           + (", censored" if censor else ""))
@@ -139,9 +164,9 @@ def main(argv=None):
     print(f"  rounds completed: min {min(s['rounds_completed'])} "
           f"max {max(s['rounds_completed'])}"
           + (f"  dropped: {sorted(s['dropped'])}" if s["dropped"] else ""))
-    if res.states:
-        print(f"  final relative gap: {res.final_rel_gap():.3e}  "
-              f"censor skip rate: {skip:.2f}")
+    if len(res.losses):
+        print(f"  final relative gap: {res.final_rel_gap():.3e}"
+              + (f"  censor skip rate: {skip:.2f}" if res.states else ""))
     print(f"  to {args.target:g} rel target: round {tt['round']:g}, "
           f"t={tt['time_s']:.4g}s, E={tt['energy_j']:.4g}J")
     per = s["per_worker_energy_j"]
@@ -152,7 +177,8 @@ def main(argv=None):
         s.update(topology=args.topology, workers=n,
                  staleness=args.async_staleness, loss=args.loss,
                  bandwidth_hz=args.bandwidth, transport=args.transport,
-                 censored=censor is not None,
+                 censored=censor is not None, engine=args.engine,
+                 participation=args.participation,
                  final_rel_gap=(res.final_rel_gap()
                                 if len(res.losses) else None),
                  to_target=tt)
@@ -160,8 +186,8 @@ def main(argv=None):
             json.dump(s, f, indent=1, default=str)
         print(f"wrote {args.out}")
     if args.fail_above is not None:
-        if not res.states:
-            print("--fail-above needs recorded states", file=sys.stderr)
+        if not len(res.losses):
+            print("--fail-above needs an objective trace", file=sys.stderr)
             return 2
         gap = res.final_rel_gap()
         if not np.isfinite(gap) or gap > args.fail_above:

@@ -43,6 +43,11 @@ def main(argv=None):
                     help="S>0 pipelines the exchange: compute runs against "
                          "S-round-old neighbor hats while S payload rounds "
                          "stay in flight (dist.qgadmm staleness pipeline)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-round Bernoulli participation rate in (0, 1]; "
+                         "<1 drops workers from random rounds with "
+                         "degree-renormalized neighbor sums "
+                         "(DistConfig.participation)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
@@ -85,6 +90,7 @@ def main(argv=None):
                           qcfg=QuantizerConfig(bits=args.bits), alpha=0.01),
         local_iters=args.local_iters, local_lr=args.lr, mode=args.mode,
         topology=args.topology, staleness=args.staleness,
+        participation=args.participation,
         censor=(CensorConfig(tau=args.censor_tau, xi=args.censor_xi)
                 if args.censor else None))
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)

@@ -17,20 +17,33 @@ per-round worker states are bit-identical to core.gadmm.graph_step (and,
 in trainer mode, to QGADMMTrainer.make_train_step()), for every topology
 and with censoring on or off.
 
+Scale: ``SimConfig.engine='vectorized'`` switches graph-mode runs to
+sim.vectorized — the same protocol replayed as whole-graph array ops
+(states stay bit-identical to the event loop; tests/test_sim.py locks
+the parity), which is what makes N=10^4 hierarchical scenarios with
+partial participation (SimConfig.participation, FaultPlan.join_round)
+run in seconds.
+
 Modules:
-  engine   — deterministic event loop / clock (repeatable tie-breaking)
-  network  — channel + fault models (latency/jitter/loss/stragglers/drops)
-  worker   — GraphActor / TrainerActor: the per-worker protocol machines
-  timeline — per-worker wall-clock + Joules accountant, *-to-target traces
-  runner   — SimConfig / simulate() / simulate_trainer() entry points
+  engine     — deterministic event loop / clock (repeatable tie-breaking)
+  network    — channel + fault models (latency/jitter/loss/stragglers/
+               drops/joins)
+  worker     — GraphActor / TrainerActor: the per-worker protocol machines
+  timeline   — per-worker wall-clock + Joules accountant, *-to-target
+               traces (Timeline per-message, ArrayTimeline array-backed)
+  runner     — SimConfig / simulate() / simulate_trainer() entry points
+  vectorized — the large-N fast path (one array op per phase wave)
 """
 from .engine import Engine, SimLivenessError
 from .network import ComputeModel, FaultPlan, Network, NetworkConfig
-from .runner import SimConfig, SimResult, simulate, simulate_trainer
-from .timeline import Timeline
+from .runner import (SimConfig, SimResult, participation_schedule, simulate,
+                     simulate_trainer)
+from .timeline import ArrayTimeline, Timeline
+from .vectorized import simulate_vectorized
 
 __all__ = [
-    "ComputeModel", "Engine", "FaultPlan", "Network", "NetworkConfig",
-    "SimConfig", "SimLivenessError", "SimResult", "Timeline", "simulate",
-    "simulate_trainer",
+    "ArrayTimeline", "ComputeModel", "Engine", "FaultPlan", "Network",
+    "NetworkConfig", "SimConfig", "SimLivenessError", "SimResult",
+    "Timeline", "participation_schedule", "simulate", "simulate_trainer",
+    "simulate_vectorized",
 ]

@@ -85,14 +85,27 @@ class ComputeModel:
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
-    """Scheduled worker failures: worker id -> first round it does NOT
-    start (it completes rounds 0..r-1, then goes permanently silent)."""
+    """Scheduled membership changes.
+
+    drop_round: worker id -> first round it does NOT start (it completes
+                rounds 0..r-1, then goes permanently silent — a *leave*).
+    join_round: worker id -> first round it participates (an *arrival*:
+                the worker sits out rounds 0..r-1 exactly like a
+                non-participating round — zero-initialized hat, neighbors
+                advance over its absent rounds from the shared schedule,
+                its edge duals stay frozen — then runs normally from
+                round r).  Workers not listed join at round 0.
+    """
 
     drop_round: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    join_round: Mapping[int, int] = dataclasses.field(default_factory=dict)
 
     def drops_at(self, worker: int) -> int | None:
         r = self.drop_round.get(worker)
         return None if r is None else int(r)
+
+    def joins_at(self, worker: int) -> int:
+        return int(self.join_round.get(worker, 0))
 
 
 class Network:
@@ -111,7 +124,14 @@ class Network:
         self.ncfg = ncfg
         self.timeline = timeline
         self._actors: list[Any] = []
-        self._dist = self._distances(placement)
+        # per-edge link distances only — retransmit/unicast pricing never
+        # needs a pair that is not a topology edge, so the O(N^2) full
+        # pairwise matrix the pre-scale implementation kept is gone
+        self._link_dist: dict[tuple[int, int], float] = {}
+        if topo.num_edges:
+            for (u, v), d in zip(topo.edges.tolist(),
+                                 placement.edge_dists().tolist()):
+                self._link_dist[(u, v)] = self._link_dist[(v, u)] = float(d)
         self._bcast_dist = placement.broadcast_dist()
         heads = int(topo.head_mask.sum())
         tails = topo.n - heads
@@ -122,11 +142,6 @@ class Network:
             for u, v in np.vstack([topo.edges, topo.edges[:, ::-1]])
         } if topo.num_edges else {}
         self._fifo_floor: dict[tuple[int, int], float] = {}
-
-    @staticmethod
-    def _distances(placement) -> np.ndarray:
-        pos = placement.positions
-        return np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
 
     def register(self, actors) -> None:
         self._actors = list(actors)
@@ -201,7 +216,7 @@ class Network:
             for j, a in late:
                 for k in range(a - 1):
                     self._tx(t_busy, src, j, bits,
-                             float(self._dist[src, j]), k + 1)
+                             self._link_dist[(src, j)], k + 1)
                     t_busy += slot
                 self._deliver(src, j, t_busy, msg)
         else:
@@ -209,7 +224,7 @@ class Network:
                 a = self._attempts(src, j)
                 for k in range(a):
                     self._tx(t_busy, src, j, bits,
-                             float(self._dist[src, j]), k)
+                             self._link_dist[(src, j)], k)
                     t_busy += slot
                 self._deliver(src, j, t_busy, msg)
         return t_busy

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core import gadmm
 from repro.core.censor import FLAG_BITS, CensorConfig
 from repro.core.comm_model import RadioConfig
-from repro.core.topology import Placement, Topology, build_topology
+from repro.core.topology import (DENSE_PLACEMENT_MAX, Placement, Topology,
+                                 build_topology)
 
 from .engine import Engine
 from .network import ComputeModel, FaultPlan, Network, NetworkConfig
@@ -43,6 +44,16 @@ class SimConfig:
                up to S rounds ahead of its slowest neighbor, computing
                against the freshest hats it has (bounded-staleness async).
     seed:      placement positions + every channel/compute draw.
+    participation: per-(round, worker) Bernoulli rate of taking part in a
+               round (1.0 = everyone, the default).  The schedule is drawn
+               once at setup from default_rng([seed, 13]) and shared by
+               every worker — an absent worker skips compute/transmit/dual
+               for that round (it still listens), neighbors advance over
+               its absence without a message, and an edge's dual updates
+               only when BOTH endpoints participate.
+    engine:    'events' = the per-message event loop (the bitwise oracle);
+               'vectorized' = the large-N fast path (sim.vectorized) —
+               identical states, batched timing (graph mode, staleness 0).
     """
 
     topology: Any = "chain"
@@ -55,12 +66,33 @@ class SimConfig:
     faults: FaultPlan = FaultPlan()
     record_states: bool = True
     max_events: int | None = None
+    participation: float = 1.0
+    engine: str = "events"
+
+    def __post_init__(self):
+        assert self.engine in ("events", "vectorized"), self.engine
+        assert 0.0 < self.participation <= 1.0, self.participation
 
     def event_budget(self, topo: Topology) -> int:
+        """Liveness budget for Engine.run, scaled by the scenario.
+
+        Per round the loop fires <= N compute completions + 2E deliveries
+        (+1 for the odd engine bookkeeping event); retransmissions
+        serialize inside a delivery's schedule and add no events, but
+        lossy runs get extra slack for the bounded-retransmit tail.
+        Membership churn (drops with their peer-down notifications, late
+        joins) adds a per-worker term on top.
+        """
         if self.max_events is not None:
             return self.max_events
         per_round = topo.n + 2 * topo.num_edges + 1
-        return 10 * (self.rounds + 1) * per_round + 1000
+        slack = 10
+        if self.network.loss_prob > 0.0:
+            slack += 2 + min(self.network.max_retransmits, 100) // 10
+        churn = sum(int(topo.degree[int(w)]) + 1
+                    for w in self.faults.drop_round)
+        churn += 2 * len(self.faults.join_round)
+        return slack * (self.rounds + 1) * per_round + 16 * churn + 1000
 
 
 @dataclasses.dataclass
@@ -101,12 +133,41 @@ def grid_placement(n: int, seed: int, topo: Topology,
     exact same Topology on both sides)."""
     rng = np.random.default_rng([seed, 11])
     pos = rng.uniform(0.0, grid, size=(n, 2))
-    dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
-    ps = int(np.argmin(dmat.sum(axis=1)))
+    if n > DENSE_PLACEMENT_MAX:
+        # large-N path: the full O(N^2) pairwise matrix is exactly what
+        # the scale refactor removed — the PS pick degrades to
+        # centroid-nearest (the sim never uses the PS baseline anyway)
+        ps = int(np.argmin(np.linalg.norm(pos - pos.mean(axis=0), axis=1)))
+        ps_dist = np.linalg.norm(pos - pos[ps], axis=1)
+    else:
+        dmat = np.linalg.norm(pos[None, :, :] - pos[:, None, :], axis=-1)
+        ps = int(np.argmin(dmat.sum(axis=1)))
+        ps_dist = dmat[ps]
     return Placement(
         positions=pos, chain=np.arange(n), ps_index=ps,
         chain_hop_dist=np.linalg.norm(pos[1:] - pos[:-1], axis=1),
-        ps_dist=dmat[ps], topology=topo)
+        ps_dist=ps_dist, topology=topo)
+
+
+def participation_schedule(scfg: SimConfig, n: int) -> np.ndarray | None:
+    """(rounds, N) bool participation mask shared by both engines, or
+    None when everyone participates every round.
+
+    Bernoulli(participation) per (round, worker) from
+    default_rng([seed, 13]) — a setup-time agreement like the key beacon,
+    so each worker advances its neighbors over absent rounds without a
+    message — AND'ed with the FaultPlan's arrival schedule (a worker that
+    joins at round r sits out rounds 0..r-1)."""
+    joins = scfg.faults.join_round
+    if scfg.participation >= 1.0 and not joins:
+        return None
+    part = np.ones((scfg.rounds, n), bool)
+    if scfg.participation < 1.0:
+        rng = np.random.default_rng([scfg.seed, 13])
+        part &= rng.uniform(size=(scfg.rounds, n)) < scfg.participation
+    for w, r in joins.items():
+        part[:int(r), int(w)] = False
+    return part
 
 
 def _beacon(key, rounds: int):
@@ -139,7 +200,18 @@ def _graph_fns(q, cfg, tc, censor):
     def dual(lam, hat, edge_mask):
         return gadmm.graph_dual_update(lam, hat, cfg, tc, edge_mask)
 
-    return {"phase": phase, "apply": apply, "dual": dual}
+    @jax.jit
+    def phase_full(theta, hat, lam, radius, bits, active, key, step):
+        """Whole-phase update for the vectorized engine: one call per
+        color group per round (active = phase mask & participation mask)
+        instead of one per actor — graph_phase leaves inactive rows
+        untouched, so the result is bitwise the actors' per-row commits."""
+        return gadmm.graph_phase(theta, hat, lam, radius, bits, active, key,
+                                 q=q, cfg=cfg, tc=tc, step=step,
+                                 censor=censor)
+
+    return {"phase": phase, "apply": apply, "dual": dual,
+            "phase_full": phase_full}
 
 
 def _build_world(scfg: SimConfig, topo: Topology, placement):
@@ -204,6 +276,10 @@ def simulate(xs, ys, gcfg: gadmm.GADMMConfig, scfg: SimConfig,
     ys: (N, m)), reusing core.gadmm.graph_phase math actor-by-actor."""
     assert gcfg.topk_frac >= 1.0, \
         "top-k sparsification is not supported by the simulator"
+    if scfg.engine == "vectorized":
+        from .vectorized import simulate_vectorized
+        return simulate_vectorized(xs, ys, gcfg, scfg, censor=censor,
+                                   placement=placement)
     n, _, d = xs.shape
     topo = build_topology(scfg.topology, n)
     q = gadmm.make_graph_quadratic(xs, ys, gcfg.rho, topo)
@@ -212,6 +288,7 @@ def simulate(xs, ys, gcfg: gadmm.GADMMConfig, scfg: SimConfig,
     fns = _graph_fns(q, gcfg, tc, censor)
     keys = _beacon(state0.key, scfg.rounds)
     payload_bits = gadmm._payload_bits_per_worker(gcfg, d)
+    part = participation_schedule(scfg, n)
 
     engine, timeline, network = _build_world(scfg, topo, placement)
     actors = [
@@ -220,7 +297,7 @@ def simulate(xs, ys, gcfg: gadmm.GADMMConfig, scfg: SimConfig,
             payload_bits=payload_bits, flag_bits=FLAG_BITS,
             engine=engine, network=network, timeline=timeline,
             compute=scfg.compute, rounds=scfg.rounds,
-            staleness=scfg.staleness,
+            staleness=scfg.staleness, part=part,
             drop_round=scfg.faults.drops_at(i), seed=scfg.seed)
         for i in range(n)
     ]
@@ -306,6 +383,11 @@ def simulate_trainer(trainer, state0, batch, scfg: SimConfig,
     assert dcfg.staleness == 0, \
         "pass staleness via SimConfig: the simulator's per-message async " \
         "schedule subsumes the trainer's in-step pipeline"
+    assert scfg.engine == "events", \
+        "the vectorized engine covers graph mode only"
+    assert scfg.participation >= 1.0 and not scfg.faults.join_round, \
+        "partial participation in trainer mode lives in " \
+        "DistConfig.participation (the in-step fold-in masks), not the sim"
     topo = trainer.topo
     assert build_topology(scfg.topology, dcfg.num_workers).kind == topo.kind
     d = sum(int(np.prod(l.shape[1:]))

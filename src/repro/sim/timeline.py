@@ -19,6 +19,8 @@ import bisect
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class TxRecord:
@@ -128,4 +130,87 @@ class Timeline:
             "rounds_completed": self.rounds_completed(),
             "per_worker_energy_j": self.per_worker_energy_j(),
             "dropped": dict(self.dropped_at),
+        }
+
+
+class ArrayTimeline:
+    """Array-backed accountant for the vectorized engine (sim.vectorized).
+
+    Same query API as :class:`Timeline`, but backed by flat numpy arrays
+    instead of one Python TxRecord per message — the number of Python
+    objects is O(1) in N and in the transmission count.  The vectorized
+    engine has no link-layer drops (membership changes are participation
+    schedules), so ``dropped_at`` is always empty; snapshots, when
+    recorded, live on the runner side.
+    """
+
+    def __init__(self, n: int, round_done: np.ndarray, tx_t: np.ndarray,
+                 tx_src: np.ndarray, tx_bits: np.ndarray,
+                 tx_energy: np.ndarray, tx_attempt: np.ndarray) -> None:
+        self.n = int(n)
+        self.round_done_arr = np.asarray(round_done, float)  # (rounds, N)
+        self.tx_t = np.asarray(tx_t, float)
+        self.tx_src = np.asarray(tx_src, np.int64)
+        self.tx_bits = np.asarray(tx_bits, float)
+        self.tx_energy = np.asarray(tx_energy, float)
+        self.tx_attempt = np.asarray(tx_attempt, np.int64)
+        self.dropped_at: dict[int, float] = {}
+        order = np.argsort(self.tx_t, kind="stable")
+        self._t_sorted = self.tx_t[order]
+        self._cum = np.cumsum(self.tx_energy[order])
+
+    # ------------------------------------------------------------- queries --
+    def total_energy_j(self) -> float:
+        return float(self.tx_energy.sum())
+
+    def total_bits(self) -> float:
+        return float(self.tx_bits.sum())
+
+    def retransmissions(self) -> int:
+        return int((self.tx_attempt > 0).sum())
+
+    def per_worker_energy_j(self) -> list[float]:
+        return np.bincount(self.tx_src, weights=self.tx_energy,
+                           minlength=self.n).tolist()
+
+    def makespan_s(self) -> float:
+        if not self.round_done_arr.size:
+            return 0.0
+        return float(self.round_done_arr[-1].max())
+
+    def rounds_completed(self) -> list[int]:
+        return [int(self.round_done_arr.shape[0])] * self.n
+
+    def global_round_times(self) -> list[float]:
+        if not self.round_done_arr.size:
+            return []
+        return self.round_done_arr.max(axis=1).tolist()
+
+    def energy_until(self, t: float) -> float:
+        j = int(np.searchsorted(self._t_sorted, t, side="right"))
+        return float(self._cum[j - 1]) if j else 0.0
+
+    def _cum_energy(self) -> tuple[list[float], list[float]]:
+        return self._t_sorted.tolist(), self._cum.tolist()
+
+    def to_target(self, losses: list[float], target: float
+                  ) -> dict[str, float]:
+        times = self.global_round_times()
+        for k, loss in enumerate(losses[: len(times)]):
+            if loss <= target:
+                t = times[k]
+                return {"round": float(k + 1), "time_s": t,
+                        "energy_j": self.energy_until(t)}
+        return {"round": float("inf"), "time_s": float("inf"),
+                "energy_j": float("inf")}
+
+    def summary(self) -> dict:
+        return {
+            "total_energy_j": self.total_energy_j(),
+            "total_bits": self.total_bits(),
+            "retransmissions": self.retransmissions(),
+            "makespan_s": self.makespan_s(),
+            "rounds_completed": self.rounds_completed(),
+            "per_worker_energy_j": self.per_worker_energy_j(),
+            "dropped": {},
         }

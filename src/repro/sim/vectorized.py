@@ -1,0 +1,268 @@
+"""Vectorized large-N fast path of the Q-GADMM simulator.
+
+The event loop (sim.runner.simulate, ``engine='events'``) is one Python
+callback per message — perfect as a bitwise protocol oracle, hopeless at
+N=10^4.  This module replays the SAME protocol as R rounds of whole-graph
+array operations: one jitted ``graph_phase`` call per color group (the
+row-local update leaves inactive rows untouched, so a single masked call
+commits exactly the rows the actors would), one ``graph_dual_update``
+per round, and a numpy timing recurrence that batches every phase-group
+transmission wave into O(E) segment ops instead of O(E) heap events.
+
+Timing recurrence (per round k, matching the actors' gates):
+
+  head start   = max(own prev completion, radio-free, newest arrival on
+                 each tail->head link)           [the k-1 freshness gate]
+  tail start   = max(own prev completion, radio-free, newest arrival on
+                 each head->tail link)           [the fresh round-k gate]
+  completion   = tails: own phase end; heads: max(phase end, newest
+                 tail->head arrival after the tail wave)
+  absent round = completes instantly at the previous completion time
+                 (partial participation / pre-join, exactly the event
+                 loop's skip path)
+
+Each transmission wave prices a broadcast slot per present sender, then
+serializes loss retransmits (or unicast per-neighbor slots) in the same
+per-sender port order the event loop walks, with per-directed-link FIFO
+floors.
+
+Parity contract (locked by tests/test_sim.py):
+
+  * per-round worker STATES are bit-identical to the event loop always —
+    both engines run the identical jitted row math over the identical
+    participation schedule (sim.runner.participation_schedule), and
+    bounded retransmit means channel draws never change which payloads
+    commit;
+  * wall-clock/energy accounting is bit-identical for
+    transport='broadcast' with loss_prob=0 and zero jitter (stragglers,
+    latency, participation, joins included);
+  * under loss/jitter/unicast the channel draws come from dedicated
+    batched streams (default_rng([seed, 17]) for attempts+jitter,
+    [seed, 19] for compute jitter), so timing agrees with the event
+    loop in distribution, not draw-for-draw.
+
+Scope: graph mode only, staleness 0, no mid-run drops — membership churn
+is expressed as arrivals/participation schedules (FaultPlan.join_round,
+SimConfig.participation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gadmm
+from repro.core.censor import FLAG_BITS, CensorConfig
+from repro.core.comm_model import tx_energy
+from repro.core.topology import Placement, build_topology
+
+from .timeline import ArrayTimeline
+
+
+def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
+                        censor: CensorConfig | None = None,
+                        placement: Placement | None = None):
+    from .runner import (SimResult, _beacon, _graph_fns, _graph_fstar,
+                         grid_placement, participation_schedule)
+
+    assert scfg.staleness == 0, \
+        "the vectorized engine models the barriered (staleness 0) schedule"
+    assert not scfg.faults.drop_round, \
+        "the vectorized engine has no link-layer drop detection; model " \
+        "churn as participation / join_round schedules"
+    n, _, d = xs.shape
+    topo = build_topology(scfg.topology, n)
+    q = gadmm.make_graph_quadratic(xs, ys, gcfg.rho, topo)
+    tc = gadmm.graph_consts(topo)
+    state0 = gadmm.graph_init_state(topo, d, gcfg, seed=scfg.seed)
+    fns = _graph_fns(q, gcfg, tc, censor)
+    keys = _beacon(state0.key, scfg.rounds)
+    payload_bits = float(gadmm._payload_bits_per_worker(gcfg, d))
+    part = participation_schedule(scfg, n)
+    placement = placement or grid_placement(n, scfg.seed, topo)
+
+    head = topo.head_mask
+    radio, ncfg, compute = scfg.radio, scfg.network, scfg.compute
+    slot = radio.slot_s
+    rounds = scfg.rounds
+    heads_ct = int(head.sum())
+    group = np.where(head, max(heads_ct, 1), max(n - heads_ct, 1))
+    bw = radio.total_bandwidth_hz / group.astype(float)
+    bcast_d = placement.broadcast_dist()
+    factors = np.asarray([compute.factor(w) for w in range(n)])
+
+    # directed out-edges in each worker's port order — the exact neighbor
+    # iteration/serialization order of Network.broadcast
+    pflat = topo.port.ravel()
+    pmask = pflat >= 0
+    pe_src = np.repeat(np.arange(n), topo.num_ports)[pmask]
+    pe_dst = pflat[pmask]
+    ld: dict[tuple[int, int], float] = {}
+    for (u, v), dist in zip(topo.edges.tolist(),
+                            placement.edge_dists().tolist()):
+        ld[(u, v)] = ld[(v, u)] = float(dist)
+    pe_dist = np.asarray([ld[(int(s), int(t))]
+                          for s, t in zip(pe_src, pe_dst)])
+
+    def _phase_edges(src_is_head: bool) -> dict:
+        idx = np.flatnonzero(head[pe_src] == src_is_head)
+        src = pe_src[idx]
+        first = np.ones(len(idx), bool)
+        first[1:] = src[1:] != src[:-1]
+        return dict(idx=idx, src=src, dst=pe_dst[idx], dist=pe_dist[idx],
+                    gidx=np.cumsum(first) - 1,
+                    firstpos=np.flatnonzero(first))
+
+    ph_h, ph_t = _phase_edges(True), _phase_edges(False)
+
+    def _gcumsum(vals: np.ndarray, ph: dict) -> np.ndarray:
+        """Inclusive cumulative sum within each sender's edge group."""
+        c = np.cumsum(vals)
+        base = c[ph["firstpos"]] - vals[ph["firstpos"]]
+        return c - base[ph["gidx"]] if len(c) else c
+
+    rng_ch = np.random.default_rng([scfg.seed, 17])
+    rng_cp = np.random.default_rng([scfg.seed, 19])
+
+    fifo = np.zeros(len(pe_src))            # per directed edge (pe order)
+    last_arr = np.full(len(pe_src), -np.inf)
+    radio_busy = np.zeros(n)
+    t_done = np.zeros(n)
+    tx_t, tx_src, tx_bits, tx_e, tx_att = [], [], [], [], []
+
+    def _record(t, srcs, b, dist, attempt):
+        tx_t.append(t)
+        tx_src.append(srcs)
+        tx_bits.append(b)
+        tx_e.append(tx_energy(b, dist, bw[srcs], slot, radio.noise_psd))
+        tx_att.append(attempt)
+
+    def _spread(reps):
+        """0..reps[i]-1 counters, flattened per segment."""
+        flat = np.repeat(np.arange(len(reps)), reps)
+        intra = np.arange(int(reps.sum())) \
+            - np.repeat(np.cumsum(reps) - reps, reps)
+        return flat, intra
+
+    def _wave(ph, Td, present, bits_w):
+        """One phase-group transmission wave: records transmissions,
+        advances the phase edges' FIFO floors / newest-arrival clocks,
+        returns the senders' radio-free times (meaningful where
+        `present`)."""
+        m = len(ph["src"])
+        sel = present[ph["src"]]
+        if ncfg.loss_prob > 0.0:
+            att = np.minimum(rng_ch.geometric(1.0 - ncfg.loss_prob, m),
+                             ncfg.max_retransmits + 1)
+        else:
+            att = np.ones(m, np.int64)
+        jit = (rng_ch.uniform(0.0, ncfg.jitter_s, m)
+               if ncfg.jitter_s > 0.0 else np.zeros(m))
+        psrc = ph["src"]
+        if ncfg.transport == "broadcast":
+            sidx = np.flatnonzero(present)
+            _record(Td[sidx], sidx, bits_w[sidx], bcast_d[sidx],
+                    np.zeros(len(sidx), np.int64))
+            retx = np.where(sel, att - 1, 0)
+            cum = _gcumsum(retx.astype(float) * slot, ph)
+            ready = Td[psrc] + slot + np.where(retx > 0, cum, 0.0)
+            free = Td + slot \
+                + np.bincount(psrc, weights=retx * slot, minlength=n)
+            late = np.flatnonzero(retx > 0)
+            if len(late):
+                reps = retx[late]
+                base = Td[psrc[late]] + slot + (cum[late] - reps * slot)
+                flat, intra = _spread(reps)
+                srcs = psrc[late][flat]
+                _record(base[flat] + intra * slot, srcs, bits_w[srcs],
+                        ph["dist"][late][flat],
+                        (intra + 1).astype(np.int64))
+        else:
+            a_eff = np.where(sel, att, 0)
+            cum = _gcumsum(a_eff.astype(float) * slot, ph)
+            ready = Td[psrc] + cum
+            free = Td + np.bincount(psrc, weights=a_eff * slot, minlength=n)
+            act = np.flatnonzero(sel)
+            if len(act):
+                reps = a_eff[act]
+                base = Td[psrc[act]] + (cum[act] - reps * slot)
+                flat, intra = _spread(reps)
+                srcs = psrc[act][flat]
+                _record(base[flat] + intra * slot, srcs, bits_w[srcs],
+                        ph["dist"][act][flat], intra.astype(np.int64))
+        arr = np.maximum(ready + ncfg.latency_s + jit, fifo[ph["idx"]])
+        fifo[ph["idx"]] = np.where(sel, arr, fifo[ph["idx"]])
+        last_arr[ph["idx"]] = np.where(sel, arr, last_arr[ph["idx"]])
+        return free
+
+    def _inmax(ph):
+        """Per-worker newest arrival over the phase's directed in-edges
+        (-inf where a link never delivered)."""
+        out = np.full(n, -np.inf)
+        if len(ph["idx"]):
+            np.maximum.at(out, ph["dst"], last_arr[ph["idx"]])
+        return out
+
+    e_head = topo.edges[:, 0]
+    e_tail = topo.edges[:, 1]
+    ones_mask = np.ones(topo.num_edges, np.float32)
+    theta, hat, lam = state0.theta, state0.theta_hat, state0.lam
+    radius, bits_st = state0.radius, state0.bits
+    round_done = np.zeros((rounds, n))
+    states: list[dict] = []
+    objs: list[float] = []
+
+    for k in range(rounds):
+        part_k = np.ones(n, bool) if part is None else part[k]
+        pres_h = head & part_k
+        pres_t = ~head & part_k
+        dt = compute.base_s * factors
+        if compute.jitter_sigma > 0.0:
+            dt = dt * rng_cp.lognormal(0.0, compute.jitter_sigma, n)
+        step = jnp.asarray(k, jnp.int32)
+        k_h, k_t = keys[k]
+
+        start_h = np.maximum(np.maximum(t_done, radio_busy), _inmax(ph_t))
+        td_h = start_h + dt
+        theta, hat, radius, bits_st, sent_h, _ = fns["phase_full"](
+            theta, hat, lam, radius, bits_st, jnp.asarray(pres_h), k_h,
+            step)
+        sent_h = np.asarray(sent_h)
+        free = _wave(ph_h, td_h, pres_h,
+                     np.where(sent_h, payload_bits, float(FLAG_BITS)))
+        radio_busy = np.where(pres_h, free, radio_busy)
+
+        start_t = np.maximum(np.maximum(t_done, radio_busy), _inmax(ph_h))
+        td_t = start_t + dt
+        theta, hat, radius, bits_st, sent_t, _ = fns["phase_full"](
+            theta, hat, lam, radius, bits_st, jnp.asarray(pres_t), k_t,
+            step)
+        sent_t = np.asarray(sent_t)
+        free = _wave(ph_t, td_t, pres_t,
+                     np.where(sent_t, payload_bits, float(FLAG_BITS)))
+        radio_busy = np.where(pres_t, free, radio_busy)
+
+        if topo.num_edges:
+            em = ones_mask if part is None \
+                else (part_k[e_head] & part_k[e_tail]).astype(np.float32)
+            lam = fns["dual"](lam, hat, jnp.asarray(em))
+
+        t_done = np.where(pres_h, np.maximum(td_h, _inmax(ph_t)),
+                          np.where(pres_t, td_t, t_done))
+        round_done[k] = t_done
+        objs.append(float(q.objective(theta)))
+        if scfg.record_states:
+            states.append(dict(
+                theta=np.asarray(theta), theta_hat=np.asarray(hat),
+                lam=np.asarray(lam), radius=np.asarray(radius),
+                bits=np.asarray(bits_st), sent=sent_h | sent_t))
+
+    def _cat(parts, dtype):
+        return np.concatenate(parts) if parts else np.zeros(0, dtype)
+
+    timeline = ArrayTimeline(
+        n, round_done, _cat(tx_t, float), _cat(tx_src, np.int64),
+        _cat(tx_bits, float), _cat(tx_e, float), _cat(tx_att, np.int64))
+    fstar = _graph_fstar(q, xs, ys, d)
+    losses = np.asarray([abs(o - fstar) for o in objs])
+    return SimResult(topo=topo, timeline=timeline, states=states,
+                     losses=losses, events=0, fstar=abs(fstar))

@@ -86,7 +86,7 @@ class BaseActor:
     """
 
     def __init__(self, i, topo, *, engine, network, timeline, compute,
-                 rounds, staleness=0, drop_round=None, seed=0):
+                 rounds, staleness=0, drop_round=None, seed=0, part=None):
         self.i = int(i)
         self.topo = topo
         self.engine = engine
@@ -99,6 +99,11 @@ class BaseActor:
         self.is_head = bool(topo.head_mask[self.i])
         self.neighbors = [int(j) for j in topo.neighbors(self.i)]
         self.rng = np.random.default_rng([seed, 3, self.i])
+        # (rounds, N) bool participation schedule, or None = everyone every
+        # round.  The schedule is agreed at setup (like the key beacon), so
+        # every worker can advance a neighbor's round over its absent
+        # rounds without a message.
+        self.part = part
 
         self.rnd = 0
         self.phase_done = False
@@ -112,10 +117,27 @@ class BaseActor:
 
     # ------------------------------------------------------------ schedule --
     def start(self) -> None:
+        for j in self.neighbors:
+            self._advance_absent(j)
         self._try_phase()
 
     def _live(self):
         return (j for j in self.neighbors if j not in self.dead)
+
+    def _participates(self, rnd: int, w: int | None = None) -> bool:
+        if self.part is None:
+            return True
+        w = self.i if w is None else w
+        return rnd >= self.rounds or bool(self.part[rnd, w])
+
+    def _advance_absent(self, j: int) -> None:
+        """Advance neighbor j's applied round over its scheduled absences
+        (no message exists for those rounds; j's hat is unchanged there,
+        which is exactly what _post_advance records for the lag history)."""
+        while (self.nbr_round[j] + 1 < self.rounds
+               and not self._participates(self.nbr_round[j] + 1, j)):
+            self.nbr_round[j] += 1
+            self._post_advance(j, self.nbr_round[j])
 
     def _phase_ready(self) -> bool:
         need = self.rnd - 1 - self.staleness if self.is_head \
@@ -129,6 +151,22 @@ class BaseActor:
     def _try_phase(self) -> None:
         if self.dropped or self.computing or self.phase_done \
                 or self.rnd >= self.rounds:
+            return
+        # absent rounds (partial participation / pre-join): no compute, no
+        # transmission, no dual — complete instantly.  Neighbors advance
+        # over these rounds from the shared schedule (_advance_absent).
+        while (self.rnd < self.rounds
+               and not (self.drop_round is not None
+                        and self.rnd >= self.drop_round)
+               and not self._participates(self.rnd)):
+            self.sent_log.append(False)
+            self._skip_hook()
+            self.timeline.record_round(self.i, self.rnd, self.engine.now)
+            self.timeline.record_snapshot(self.i, self.rnd, self._snapshot())
+            self.rnd += 1
+            for j in self._live():
+                self._drain(j)
+        if self.rnd >= self.rounds:
             return
         if self.drop_round is not None and self.rnd >= self.drop_round:
             self.dropped = True
@@ -160,25 +198,40 @@ class BaseActor:
         self.timeline.record_snapshot(self.i, self.rnd, self._snapshot())
         self.rnd += 1
         self.phase_done = False
+        for j in self._live():
+            self._drain(j)
         self._try_phase()
 
     # ------------------------------------------------------------ receiving --
     def on_message(self, msg: Msg) -> None:
         if self.dropped:
             return
-        j = msg.src
         # delta-coded payloads apply strictly in round order; the FIFO
         # channel makes out-of-order arrival impossible, the buffer keeps
         # the invariant explicit (and guards any future transport).
-        self._early[j][msg.rnd] = msg
-        while self.nbr_round[j] + 1 in self._early[j]:
+        self._early[msg.src][msg.rnd] = msg
+        self._drain(msg.src)
+        self._try_phase()
+        self._try_complete()
+
+    def _drain(self, j: int) -> None:
+        """Fold neighbor j's buffered payloads in, up to round rnd+S.
+
+        The round-k dual must see round-k mirrors, so a payload for a
+        FUTURE round stays buffered until this worker's own round catches
+        up (drained again on every round advance).  Without partial
+        participation the gate is a no-op — the barrier never lets a
+        neighbor's round exceed rnd+S — but an absence schedule releases
+        neighbors early (skip-advance), and their round-(k+1) payload
+        must not commit into a mirror my round-k dual still reads."""
+        while (self.nbr_round[j] + 1 in self._early[j]
+               and self.nbr_round[j] + 1 <= self.rnd + self.staleness):
             m = self._early[j].pop(self.nbr_round[j] + 1)
             if m.sent:
                 self._apply(j, m)
             self.nbr_round[j] += 1
             self._post_advance(j, m.rnd)
-        self._try_phase()
-        self._try_complete()
+            self._advance_absent(j)
 
     def on_peer_down(self, j: int) -> None:
         if self.dropped or j in self.dead:
@@ -201,6 +254,10 @@ class BaseActor:
     def _post_advance(self, j: int, rnd: int) -> None:
         """Called after neighbor j's round-`rnd` message is folded in
         (sent or censored) — subclasses record lag history here."""
+
+    def _skip_hook(self) -> None:
+        """Called when an absent round completes instantly — subclasses
+        record the (unchanged) own-row lag history here."""
 
     def _dual_update(self) -> None:
         raise NotImplementedError
@@ -273,15 +330,27 @@ class GraphActor(BaseActor):
         if self.staleness > 0:
             self._nbr_hist[j][rnd] = jax.tree.map(lambda a: a[j], self.hat)
 
+    def _skip_hook(self):
+        # absent round: own hat unchanged — record it so the round-(k-S)
+        # common-round dual can look the lag snapshot up later
+        if self.staleness > 0:
+            self._own_hist[self.rnd] = jax.tree.map(lambda a: a[self.i],
+                                                    self.hat)
+
     def _edge_mask(self) -> np.ndarray:
         """1.0 on live incident edges whose neighbor hat is round-fresh.
 
         Barriered (staleness 0) completion implies nbr_round[j] == rnd, so
         the mask is all-ones there (bit-parity preserved; x*1.0 is exact)
-        and only drop-frozen edges are gated off."""
+        and only drop-frozen edges are gated off.  An edge whose far
+        endpoint sits this round out (partial participation / pre-join) is
+        also frozen: the dual updates only when BOTH endpoints participate,
+        so the two mirrors integrate identical increments."""
         mask = self.edge_alive.copy()
         for j, e in self._edge_of.items():
             if j not in self.dead and self.nbr_round[j] < self.rnd:
+                mask[e] = 0.0
+            if not self._participates(self.rnd, j):
                 mask[e] = 0.0
         return mask
 
@@ -304,6 +373,8 @@ class GraphActor(BaseActor):
                     mask[e] = 0.0
                 else:
                     hat_sub = _set_row(hat_sub, j, row)
+                if not self._participates(self.rnd, j):
+                    mask[e] = 0.0      # both-endpoints participation rule
             self.lam = self.fns["dual"](self.lam, hat_sub,
                                         jnp.asarray(mask))
         for h in (self._own_hist, *self._nbr_hist.values()):

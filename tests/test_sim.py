@@ -320,6 +320,143 @@ def test_star_hub_drop_isolates_leaves_without_deadlock(problem, staleness):
     assert np.all(np.isfinite(np.asarray(res.losses)))
 
 
+# ------------------------------------------- vectorized engine parity ------
+_STATE_KEYS = ("theta", "theta_hat", "lam", "radius", "bits", "sent")
+
+
+def _run_both_engines(xs, ys, cfg, censor=None, **scfg_kw):
+    ev = simulate(xs, ys, cfg, SimConfig(engine="events", **scfg_kw),
+                  censor=censor)
+    vec = simulate(xs, ys, cfg, SimConfig(engine="vectorized", **scfg_kw),
+                   censor=censor)
+    return ev, vec
+
+
+def _assert_state_parity(ev, vec, ctx):
+    assert len(ev.states) == len(vec.states), ctx
+    for k, (a, b) in enumerate(zip(ev.states, vec.states)):
+        for name in _STATE_KEYS:
+            assert np.array_equal(np.asarray(a[name]),
+                                  np.asarray(b[name])), (ctx, k, name)
+
+
+def _assert_timing_parity(ev, vec, ctx):
+    # loss-free broadcast scenarios: the vectorized recurrence replays the
+    # event loop's wall-clock and Joules EXACTLY, not just in distribution
+    np.testing.assert_array_equal(ev.timeline.global_round_times(),
+                                  vec.timeline.global_round_times(),
+                                  err_msg=str(ctx))
+    assert ev.timeline.makespan_s() == vec.timeline.makespan_s(), ctx
+    # per-transmission records match; the AGGREGATES are float sums taken
+    # in different orders (Python sum vs numpy pairwise), hence allclose
+    np.testing.assert_allclose(ev.timeline.total_energy_j(),
+                               vec.timeline.total_energy_j(), rtol=1e-12,
+                               err_msg=str(ctx))
+    np.testing.assert_allclose(ev.timeline.total_bits(),
+                               vec.timeline.total_bits(), rtol=1e-12,
+                               err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("kind", ["chain", "ring", "star", "torus2d",
+                                  "cluster_of_stars", "federated"])
+@pytest.mark.parametrize("censored", [False, True])
+def test_vectorized_bitwise_parity_with_events(problem, kind, censored):
+    """Acceptance: SimConfig.engine='vectorized' reproduces the event
+    loop bit-identically — per-round worker states on every topology
+    (hierarchical ones included) with censoring on/off, and the exact
+    wall-clock/energy timeline on the loss-free broadcast channel."""
+    xs, ys = problem
+    censor = CensorConfig(tau=1.0, xi=0.9) if censored else None
+    cfg = gadmm.GADMMConfig(rho=24.0, quantize=True,
+                            qcfg=QuantizerConfig(bits=2))
+    ev, vec = _run_both_engines(xs, ys, cfg, censor=censor, topology=kind,
+                                rounds=ROUNDS, seed=0)
+    _assert_state_parity(ev, vec, (kind, censored))
+    _assert_timing_parity(ev, vec, (kind, censored))
+
+
+def test_vectorized_parity_participation_joins_stragglers(problem):
+    """Partial participation + a mid-run join + stragglers + latency: the
+    two engines still agree bitwise on states AND on the timeline (the
+    scenario is loss-free, so timing is exact too)."""
+    xs, ys = problem
+    cfg = gadmm.GADMMConfig(rho=24.0, quantize=True,
+                            qcfg=QuantizerConfig(bits=4))
+    kw = dict(topology="cluster_of_stars", rounds=20, seed=3,
+              participation=0.6,
+              network=NetworkConfig(latency_s=1e-3),
+              compute=ComputeModel(base_s=1e-3, straggler={2: 6.0}),
+              faults=FaultPlan(join_round={5: 4}))
+    ev, vec = _run_both_engines(xs, ys, cfg, **kw)
+    _assert_state_parity(ev, vec, "participation+join")
+    _assert_timing_parity(ev, vec, "participation+join")
+    # the schedule genuinely removed workers from rounds
+    assert any(not s["sent"].all() for s in ev.states)
+
+
+def test_vectorized_parity_lossy_channel_states_only(problem):
+    """Packet loss: retransmissions never change WHICH payloads commit
+    (bounded-retransmit broadcast), so states stay bit-identical; the
+    channel draws differ between engines, so wall-clock is only
+    distribution-equal and is not compared."""
+    xs, ys = problem
+    cfg = gadmm.GADMMConfig(rho=24.0, quantize=True,
+                            qcfg=QuantizerConfig(bits=2))
+    ev, vec = _run_both_engines(
+        xs, ys, cfg, topology="ring", rounds=ROUNDS, seed=1,
+        network=NetworkConfig(loss_prob=0.2, latency_s=1e-3))
+    _assert_state_parity(ev, vec, "lossy")
+    assert vec.timeline.retransmissions() > 0
+
+
+def test_membership_edge_cases_no_deadlock(problem):
+    """Dynamic membership on a hierarchical graph: a worker joining
+    mid-run and the LAST leaf of a cluster leaving must not stall anyone
+    — neighbors advance over scheduled absences and drop detection
+    unfreezes the leader."""
+    xs, ys = problem
+    from repro.core.topology import cluster_of_stars_topology
+    topo = cluster_of_stars_topology(7, clusters=3)
+    # find a leader whose cluster has exactly one leaf, and that leaf
+    deg = np.asarray(topo.degree)
+    leaf = next(w for w in range(7)
+                if deg[w] == 1 and deg[topo.neighbors(w)[0]] == 2 + 1)
+    joiner = next(w for w in range(7) if deg[w] == 1 and w != leaf)
+    cfg = gadmm.GADMMConfig(rho=24.0, quantize=True,
+                            qcfg=QuantizerConfig(bits=4))
+    rounds = 12
+    res = simulate(xs[:7], ys[:7], cfg, SimConfig(
+        topology=topo, rounds=rounds, seed=0,
+        network=NetworkConfig(latency_s=1e-3, detection_delay_s=1e-3),
+        faults=FaultPlan(drop_round={leaf: 6}, join_round={joiner: 3})))
+    done = res.timeline.rounds_completed()
+    assert done[leaf] == 6
+    assert all(done[w] == rounds for w in range(7) if w != leaf)
+    assert np.all(np.isfinite(np.asarray(res.losses)))
+
+
+def test_event_budget_scales_without_false_liveness_trip(problem):
+    """Regression for the liveness budget: a larger-N lossy hierarchical
+    run with churn completes within SimConfig.event_budget — the budget
+    scales with N, E, the retransmit bound, and membership churn instead
+    of tripping SimLivenessError on legitimate long schedules."""
+    n = 48
+    xs, ys, _ = regression_shards(n_workers=n, samples=4 * n, d=3, seed=2)
+    cfg = gadmm.GADMMConfig(rho=5.0, quantize=True,
+                            qcfg=QuantizerConfig(bits=2))
+    scfg = SimConfig(
+        topology="cluster_of_stars", rounds=6, seed=2, record_states=False,
+        network=NetworkConfig(loss_prob=0.3, latency_s=1e-3, jitter_s=2e-3,
+                              detection_delay_s=1e-3),
+        faults=FaultPlan(drop_round={7: 3}, join_round={11: 2}))
+    res = simulate(jnp.asarray(xs), jnp.asarray(ys), cfg, scfg)
+    done = res.timeline.rounds_completed()
+    assert done[7] == 3
+    assert all(done[w] == 6 for w in range(n) if w != 7)
+    from repro.core.topology import build_topology as _bt
+    assert res.events <= scfg.event_budget(_bt("cluster_of_stars", n))
+
+
 # --------------------------------------------------- liveness property -----
 # Guarded like the other property suites (hard import under REPRO_CI=1),
 # but per-test rather than per-module: the parity/fault/engine tier above
@@ -382,9 +519,52 @@ if _HAVE_HYPOTHESIS:
                 assert done[w] == rounds
         assert res.events <= SimConfig(topology=topo, rounds=rounds,
                                        seed=seed).event_budget(topo)
+    @st.composite
+    def random_engine_scenario(draw):
+        n = draw(st.integers(min_value=2, max_value=7))
+        parents = [draw(st.integers(min_value=0, max_value=i - 1))
+                   for i in range(1, n)]
+        edges = [(p, i) for i, p in enumerate(parents, start=1)]
+        censored = draw(st.booleans())
+        loss = draw(st.sampled_from([0.0, 0.3]))
+        participation = draw(st.sampled_from([1.0, 0.6]))
+        joins = {}
+        if n > 2 and draw(st.booleans()):
+            w = draw(st.integers(min_value=0, max_value=n - 1))
+            joins[w] = draw(st.integers(min_value=1, max_value=3))
+        seed = draw(st.integers(min_value=0, max_value=2**16))
+        return n, edges, censored, loss, participation, joins, seed
+
+    @settings(max_examples=12, deadline=None)
+    @given(random_engine_scenario())
+    def test_vectorized_matches_events_property(scenario):
+        """Property: over random trees x censoring x loss x partial
+        participation x late joins, the vectorized engine's per-round
+        states are bit-identical to the event-loop oracle's."""
+        n, edges, censored, loss, participation, joins, seed = scenario
+        topo = bipartite_topology(n, edges)
+        xs, ys, _ = regression_shards(n_workers=n, samples=4 * n, d=3,
+                                      seed=seed % 7)
+        xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+        cfg = gadmm.GADMMConfig(rho=5.0, quantize=True,
+                                qcfg=QuantizerConfig(bits=2))
+        censor = CensorConfig(tau=1.0, xi=0.9) if censored else None
+        kw = dict(topology=topo, rounds=5, seed=seed,
+                  participation=participation,
+                  network=NetworkConfig(loss_prob=loss, latency_s=1e-3,
+                                        detection_delay_s=1e-3),
+                  faults=FaultPlan(join_round=joins))
+        ev, vec = _run_both_engines(xs, ys, cfg, censor=censor, **kw)
+        _assert_state_parity(ev, vec, scenario)
+        if loss == 0.0:
+            _assert_timing_parity(ev, vec, scenario)
 else:  # keep the skip visible in bare-checkout test reports
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_event_loop_never_deadlocks():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_vectorized_matches_events_property():
         pass
 
 
@@ -394,13 +574,16 @@ def test_recorded_bench_sim_artifact():
     scenario matrix with the acceptance-criteria physics: every scenario
     converges (<= 1e-3 relative gap), loss and stragglers stretch
     time-to-target without changing the objective, the ideal-network
-    energy matches the closed form, and the star-unicast run exposes the
-    hub serialization ROADMAP.md quotes."""
+    energy matches the closed form, the star-unicast run exposes the
+    hub serialization ROADMAP.md quotes, and the ``scale`` section
+    records the vectorized 10^4-worker partial-participation run."""
     root = os.path.join(os.path.dirname(__file__), "..")
     path = os.path.join(root, "BENCH_sim.json")
     if not os.path.exists(path):
         pytest.skip("BENCH_sim.json not generated yet")
-    rows = json.load(open(path))
+    doc = json.load(open(path))
+    assert set(doc) == {"scenarios", "scale"}, sorted(doc)
+    rows = doc["scenarios"]
     matrix = [r for r in rows if r["tag"] == "matrix"]
     assert len(matrix) == 3 * 3 * 2, len(matrix)  # topo x bw x loss
     assert {r["topology"] for r in matrix} == {"chain", "ring", "star"}
@@ -431,3 +614,19 @@ def test_recorded_bench_sim_artifact():
     assert hub["hub_airtime_s"] > 3.0 * hub["leaf_airtime_mean_s"]
     assert (hub["makespan_s"]
             > 1.5 * by_key[("star", hub["bw_hz"], 0.0)]["makespan_s"])
+    # scale section: the massive-N deliverable — 10^4 workers, partial
+    # participation, lossy channel, vectorized engine, and the whole
+    # bench run measured in seconds (not minutes) of wall-clock
+    scale = doc["scale"]
+    sc = next(r for r in scale if r["tag"] == "scale")
+    assert sc["engine"] == "vectorized" and sc["workers"] >= 10_000
+    assert sc["topology"] == "cluster_of_stars"
+    assert sc["participation"] == 0.5 and sc["loss"] == 0.05
+    assert np.isfinite(sc["time_to_target_s"]), sc
+    assert np.isfinite(sc["energy_to_target_j"]), sc
+    assert sc["final_rel_gap"] <= sc["rel_target"], sc
+    assert sc["bench_wall_s"] < 60.0, sc
+    full = next(r for r in scale if r["tag"] == "full_participation")
+    # half the workers per round -> roughly half the wire traffic
+    assert sc["total_bits"] < 0.7 * full["total_bits"], (
+        sc["total_bits"], full["total_bits"])

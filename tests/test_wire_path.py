@@ -632,3 +632,53 @@ def test_single_worker_degenerate_trains():
         assert np.isfinite(float(m["loss"]))
         assert float(m["wire_bits_per_round"]) == 0.0
         assert float(m["consensus_resid"]) == 0.0
+
+
+# --------------------------------------------- partial participation -------
+def test_trainer_partial_participation_listen_only():
+    """DistConfig.participation < 1 draws a shared per-round worker mask
+    from a fold-in stream: absent workers skip compute/transmit (fewer
+    billed wire bits) but still fold received hats through
+    degree-renormalized port weights, so the objective keeps decreasing.
+    An explicit participation=1.0 must take the untouched default path
+    bit-for-bit (the gate never fires, the key stream is unperturbed)."""
+    w, steps = 6, 12
+    tr_f, st_f, batch = _setup(w=w, topology="ring")
+    tr_p, st_p, _ = _setup(w=w, topology="ring", participation=0.5)
+    step_f = jax.jit(tr_f.make_train_step())
+    step_p = jax.jit(tr_p.make_train_step())
+    bits_f, bits_p, losses = [], [], []
+    for _ in range(steps):
+        st_f, m_f = step_f(st_f, batch)
+        st_p, m_p = step_p(st_p, batch)
+        bits_f.append(float(m_f["wire_bits_per_round"]))
+        bits_p.append(float(m_p["wire_bits_per_round"]))
+        losses.append(float(m_p["loss"]))
+    assert np.mean(bits_p) < 0.7 * np.mean(bits_f), (bits_p, bits_f)
+    assert np.isfinite(losses[-1]) and losses[-1] < losses[0], losses
+
+    tr_1, st_1, _ = _setup(w=w, topology="ring", participation=1.0)
+    tr_d, st_d, _ = _setup(w=w, topology="ring")
+    st_1, m_1 = _run(tr_1, st_1, batch, steps=2)
+    st_d, m_d = _run(tr_d, st_d, batch, steps=2)
+    for a, b in zip(jax.tree.leaves(st_1.theta), jax.tree.leaves(st_d.theta)):
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8) if a.dtype == jnp.bfloat16
+            else np.asarray(a),
+            np.asarray(b).view(np.uint8) if b.dtype == jnp.bfloat16
+            else np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m_1["loss"]),
+                                  np.asarray(m_d["loss"]))
+
+
+def test_trainer_participation_composes_and_validates():
+    """participation composes with censoring and bounded staleness without
+    NaNs, and the config rejects rates outside (0, 1]."""
+    for kw in ({"censor": CensorConfig(tau=0.05, xi=0.9)}, {"staleness": 1}):
+        tr, state, batch = _setup(w=4, topology="ring", participation=0.5,
+                                  **kw)
+        state, m = _run(tr, state, batch, steps=4)
+        assert np.isfinite(float(m["loss"])), kw
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(AssertionError):
+            DistConfig(num_workers=4, gadmm=GADMMConfig(), participation=bad)
