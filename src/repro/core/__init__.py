@@ -7,8 +7,8 @@ from .gadmm import (ChainState, GADMMConfig, GraphState, Quadratic,
                     graph_bits_per_round, graph_consts, graph_dual_update,
                     graph_init_state, graph_phase, graph_step, init_state,
                     make_graph_quadratic, make_quadratic, quantize_rows)
-from .quantizer import (QuantizerConfig, QuantState, dequantize, payload_bits,
-                        quantize)
+from .quantizer import (LayerwiseConfig, QuantizerConfig, QuantState,
+                        allocate_bits, dequantize, payload_bits, quantize)
 from .sgadmm import SGADMMConfig, SGADMMTrainer
 from .topology import (Placement, Topology, build_topology, chain_topology,
                        random_placement, ring_topology, star_topology,
@@ -16,7 +16,8 @@ from .topology import (Placement, Topology, build_topology, chain_topology,
 
 __all__ = [
     "ChainState", "GADMMConfig", "Quadratic", "bits_per_round", "gadmm_step",
-    "init_state", "make_quadratic", "QuantizerConfig", "QuantState",
+    "init_state", "make_quadratic", "LayerwiseConfig", "QuantizerConfig",
+    "QuantState", "allocate_bits",
     "dequantize", "payload_bits", "quantize", "SGADMMConfig", "SGADMMTrainer",
     "CensorConfig", "GraphState", "dequantize_rows", "graph_bits_per_round",
     "graph_consts", "graph_dual_update", "graph_init_state", "graph_phase",

@@ -262,9 +262,8 @@ def bits_per_round(cfg: GADMMConfig, n: int, d: int) -> int:
     """Total bits all N workers transmit in one iteration.
 
     Q-GADMM payload per worker = b*d + header, with the header shared with
-    quantizer.payload_bits (quantizer.header_bits: R always, b only when
-    adaptive); the paper's experiments use fixed bits, i.e. 32 + b*d
-    (Sec. V-A).
+    quantizer.payload_bits (quantizer.header_bits: the R f32 and the b i32
+    the payload always carries — 64 + b*d for fixed global-radius bits).
     """
     return n * _payload_bits_per_worker(cfg, d)
 

@@ -109,7 +109,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import censor as censor_mod
 from repro.core.censor import CensorConfig
 from repro.core.gadmm import GADMMConfig
-from repro.core.quantizer import _next_bits
+from repro.core.quantizer import (LayerwiseConfig, _next_bits, allocate_bits,
+                                  header_bits)
 from repro.core.topology import (Topology, build_topology, edge_index,
                                  edge_schedule)
 from repro.kernels.pack import ops as pack_ops
@@ -185,6 +186,21 @@ class DistConfig:
                  worker computed but stayed silent) and with the
                  staleness pipeline (the mask gates the round's compute
                  and its in-flight payload alike).
+    layerwise:   optional core.quantizer.LayerwiseConfig (L-FGADMM,
+                 arXiv:1911.03654): each pytree leaf gets its own bit
+                 width, exchange period and censor threshold, with an
+                 optional per-round bit-budget controller
+                 (quantizer.allocate_bits) reallocating a fixed payload
+                 budget toward the leaves whose residuals moved most.
+                 Forces radius_mode='per_tensor' (per-leaf radii are the
+                 layerwise codec's native sideband) and requires the
+                 quantized wire.  An unsent leaf rides the payload with
+                 radius 0 — the codec's R == 0 guard makes it a no-op on
+                 both endpoints, so receivers hold the leaf's last hat and
+                 the sender==receiver bit-sync invariant survives.
+                 Composes with censor (worker-level threshold on the
+                 leaf-masked candidate commit), staleness (the masked
+                 radius rides the inbox ring) and participation.
     """
 
     num_workers: int
@@ -204,11 +220,16 @@ class DistConfig:
     censor: CensorConfig | None = None
     staleness: int = 0
     participation: float = 1.0
+    layerwise: LayerwiseConfig | None = None
 
     def __post_init__(self):
         assert 0.0 < self.participation <= 1.0, self.participation
         assert self.mode in ("gauss-seidel", "jacobi"), self.mode
         assert self.radius_mode in ("global", "per_tensor"), self.radius_mode
+        if self.layerwise is not None:
+            assert self.gadmm.quantize, \
+                "layerwise bit allocation needs the quantized wire"
+            object.__setattr__(self, "radius_mode", "per_tensor")
         build_topology(self.topology, self.num_workers)  # validate early
         assert self.wire_impl in ("jnp", "pallas", "pallas_compiled"), \
             self.wire_impl
@@ -226,6 +247,18 @@ class DistConfig:
             "topk sparsification is not supported by the distributed trainer"
         q = self.gadmm.qcfg
         max_b = q.max_bits if q.adapt_bits else q.bits
+        lw = self.layerwise
+        if lw is not None:
+            # effective max bit width across leaves: the dense simulated
+            # exchange packs the WHOLE row, so all leaves must fit a nibble
+            if lw.adapt_bits or lw.budget_bits is not None:
+                max_b = lw.max_bits
+            elif lw.bits is None:
+                max_b = q.bits
+            elif isinstance(lw.bits, int):
+                max_b = lw.bits
+            else:
+                max_b = max(int(b) for b in lw.bits)
         if self.pack_wire is None:
             object.__setattr__(
                 self, "pack_wire", bool(self.gadmm.quantize and max_b <= 4))
@@ -259,7 +292,7 @@ class DistState(NamedTuple):
     hat_edge: Any   # directed-edge slab (2E, ...): dst's view of src's hat
     lam_edge: Any   # directed-edge slab (2E, ...): dst's dual mirror
     radius: Array   # (W,) global mode | (W, n_tensors) per_tensor mode
-    bits: Array     # (W,) int32
+    bits: Array     # (W,) int32 | (W, n_tensors) layerwise mode
     opt_mu: Any     # local Adam first moment
     opt_nu: Any     # local Adam second moment
     opt_t: Array    # (W,) int32 Adam step counts
@@ -287,6 +320,12 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
     n_tensors = len(jax.tree.leaves(theta))
     radius = (jnp.zeros((w,), jnp.float32) if dcfg.radius_mode == "global"
               else jnp.zeros((w, n_tensors), jnp.float32))
+    if dcfg.layerwise is not None:
+        sizes = [int(np.prod(l.shape)) for l in jax.tree.leaves(params)]
+        lw_bits, _, _ = dcfg.layerwise.resolve(sizes, dcfg.gadmm.qcfg.bits)
+        bits0 = jnp.tile(jnp.asarray(lw_bits, jnp.int32)[None], (w, 1))
+    else:
+        bits0 = jnp.full((w,), dcfg.gadmm.qcfg.bits, jnp.int32)
     de = 2 * topo.num_edges
     edge_zeros = lambda: jax.tree.map(
         lambda a: jnp.zeros((de,) + a.shape, a.dtype), params)
@@ -298,7 +337,7 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
         inbox = {
             "wire": jnp.zeros((s, w, d), wire_dtype),
             "radius": jnp.zeros((s,) + radius.shape, jnp.float32),
-            "bits": jnp.zeros((s, w), jnp.int32),
+            "bits": jnp.zeros((s,) + bits0.shape, jnp.int32),
             # all-False sent flags = the pipeline-fill rounds decode to
             # no-ops, exactly like S censored rounds
             "sent": jnp.zeros((s, w), bool),
@@ -307,8 +346,7 @@ def init_state(init_fn: Callable[[Array], Any], key: Array,
     return DistState(
         theta=theta, theta_hat=zeros(),
         hat_edge=edge_zeros(), lam_edge=edge_zeros(),
-        radius=radius,
-        bits=jnp.full((w,), dcfg.gadmm.qcfg.bits, jnp.int32),
+        radius=radius, bits=bits0,
         opt_mu=zeros(), opt_nu=zeros(),
         opt_t=jnp.zeros((w,), jnp.int32),
         key=k_state, step=jnp.zeros((), jnp.int32),
@@ -376,6 +414,25 @@ class QGADMMTrainer:
         self._view_idx = [jnp.asarray(np.where(slot[:, c] >= 0, slot[:, c],
                                                0), np.int32)
                           for c in range(ports)]
+        # layerwise: per-leaf tables cache + the per-leaf eq. 11 config
+        self._lw_cache: dict = {}
+        lw = dcfg.layerwise
+        self._lw_qcfg = (dataclasses.replace(
+            dcfg.gadmm.qcfg, adapt_bits=True, max_bits=lw.max_bits,
+            bits=min(dcfg.gadmm.qcfg.bits, lw.max_bits))
+            if lw is not None and lw.adapt_bits else None)
+
+    def _lw_tables(self, sizes: tuple):
+        """Resolved per-leaf (bits, periods, taus) device tables for a flat
+        leaf-size tuple (static; cached per distinct pytree shape)."""
+        if sizes not in self._lw_cache:
+            bits, periods, taus = self.dcfg.layerwise.resolve(
+                list(sizes), self.dcfg.gadmm.qcfg.bits)
+            self._lw_cache[sizes] = (
+                jnp.asarray(bits, jnp.int32),
+                jnp.asarray(periods, jnp.int32),
+                None if taus is None else jnp.asarray(taus, jnp.float32))
+        return self._lw_cache[sizes]
 
     def _replicate(self, tree):
         """Pin every leaf of a pytree to the fully replicated layout (a
@@ -433,7 +490,8 @@ class QGADMMTrainer:
                 "wire": P(None, *wspec, None),
                 "radius": (P(None, *wspec) if state.inbox["radius"].ndim == 2
                            else P(None, *wspec, None)),
-                "bits": P(None, *wspec),
+                "bits": (P(None, *wspec) if state.inbox["bits"].ndim == 2
+                         else P(None, *wspec, None)),
                 "sent": P(None, *wspec),
             }
             hat_lag = pspec(state.hat_lag)
@@ -442,7 +500,8 @@ class QGADMMTrainer:
             hat_edge=espec(state.hat_edge), lam_edge=espec(state.lam_edge),
             radius=(wspec if state.radius.ndim == 1
                     else P(*wspec, None)),
-            bits=wspec, opt_mu=pspec(state.opt_mu), opt_nu=pspec(state.opt_nu),
+            bits=(wspec if state.bits.ndim == 1 else P(*wspec, None)),
+            opt_mu=pspec(state.opt_mu), opt_nu=pspec(state.opt_nu),
             opt_t=wspec, key=P(None), step=P(), inbox=inbox, hat_lag=hat_lag)
 
     def _shardings(self, specs):
@@ -629,10 +688,28 @@ class QGADMMTrainer:
             return jnp.zeros((w, 0), jnp.float32)
         return jnp.stack(cols, axis=1)
 
+    def _per_leaf_delta2(self, a_leaves, b_leaves):
+        """(W, L) per-leaf squared L2 distances — the residual-magnitude
+        ranking score of the bit-budget controller and the per-leaf censor
+        statistic (zero-size leaves get 0)."""
+        w = self.dcfg.num_workers
+        cols = []
+        for x, h in zip(a_leaves, b_leaves):
+            if int(np.prod(x.shape[1:])) == 0:
+                cols.append(jnp.zeros((w,), jnp.float32))
+            else:
+                d = (x.astype(jnp.float32)
+                     - h.astype(jnp.float32)).reshape(w, -1)
+                cols.append(jnp.sum(d * d, axis=1))
+        if not cols:
+            return jnp.zeros((w, 0), jnp.float32)
+        return jnp.stack(cols, axis=1)
+
     def _qdq_row(self, theta_row, hat_row, u_row, radius, bits):
         """One fused quantize-dequantize call on one (d,) wire-row slab.
         radius is a scalar (global mode) or a (d,) per-element expansion
-        (per_tensor mode)."""
+        (per_tensor mode); bits is a scalar or a (d,) per-element expansion
+        (layerwise per-leaf widths)."""
         levels = (2.0 ** bits.astype(jnp.float32)) - 1.0
         radius = jnp.asarray(radius, jnp.float32)
         if self.dcfg.wire_impl == "jnp":
@@ -642,7 +719,7 @@ class QGADMMTrainer:
             theta_row, hat_row, u_row, radius, levels,
             interpret=self.dcfg.wire_impl != "pallas_compiled")
 
-    def _qdq_sharded(self, theta_f, hat_f, u, radius, bits):
+    def _qdq_sharded(self, theta_f, hat_f, u, radius, bits, seg=None):
         """Codec under shard_map: every device runs one fused
         quantize-dequantize on exactly the (1, d_loc) wire slab it owns,
         with its worker's radius/bits riding along the 'worker' axis.
@@ -650,81 +727,164 @@ class QGADMMTrainer:
         This keeps the codec internals out of the SPMD partitioner — which
         XLA:CPU miscompiles for the pad/reshape/slice patterns inside the
         kernels (same bug family as the RoPE note in dist.sharding) — and
-        is the production TPU layout anyway: local data, local kernel."""
+        is the production TPU layout anyway: local data, local kernel.
+
+        Per-leaf radius/bits (ndim == 2) arrive as the raw (W, L) tables
+        plus the static position->leaf map `seg` and expand to per-position
+        values INSIDE the body, on each device's own slab.  Expanding
+        outside (the old `per_leaf_r[:, seg]` form) hands the partitioner
+        a gather whose output is sharded along the gathered dimension,
+        which XLA:CPU miscompiles inside the fused step — the sender
+        quantized against garbage radii while receivers (whose decode runs
+        on replicated operands, see phase_apply) used the true ones, so
+        every sharded per_tensor/layerwise run silently desynced and the
+        consensus residual grew without bound."""
         wspec = P("worker") if self.dcfg.num_workers > 1 else P(None)
         bspec = P(*wspec, ("fsdp", "model"))
-        rspec = bspec if radius.ndim == 2 else wspec
+        lspec = P(*wspec, None)
+        rspec = lspec if radius.ndim == 2 else wspec
+        bitspec = lspec if bits.ndim == 2 else wspec
+        d_pad = theta_f.shape[1]
+        if seg is not None:
+            # padding positions -> sentinel leaf L: R = 0 keeps them inert,
+            # b = 1 keeps the codec's levels >= 1
+            n_leaves = int(radius.shape[1] if radius.ndim == 2
+                           else bits.shape[1])
+            seg_pad = np.full((d_pad,), n_leaves, np.int32)
+            seg_pad[:seg.size] = seg
+        msize = self.mesh.shape["model"]
 
         def body(th, h, uu, rr, bb):
-            q, hh = self._qdq_row(th[0], h[0], uu[0], rr[0], bb[0])
+            rr_row, bb_row = rr[0], bb[0]
+            if seg is not None:
+                d_loc = th.shape[1]
+                slab = (jax.lax.axis_index("fsdp") * msize
+                        + jax.lax.axis_index("model"))
+                seg_loc = jax.lax.dynamic_slice(
+                    jnp.asarray(seg_pad), (slab * d_loc,), (d_loc,))
+                if rr.ndim == 2:
+                    rr_row = jnp.concatenate(
+                        [rr_row, jnp.zeros((1,), rr.dtype)])[seg_loc]
+                if bb.ndim == 2:
+                    bb_row = jnp.concatenate(
+                        [bb_row, jnp.ones((1,), bb.dtype)])[seg_loc]
+            q, hh = self._qdq_row(th[0], h[0], uu[0], rr_row, bb_row)
             return q[None], hh[None]
 
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(bspec, bspec, bspec, rspec, wspec),
+            in_specs=(bspec, bspec, bspec, rspec, bitspec),
             out_specs=(bspec, bspec), check_rep=False)(
                 theta_f, hat_f, u, radius, bits)
 
     def _quantize_all(self, theta, hat, bits_prev, radius_prev, key,
-                      sharded: bool):
+                      sharded: bool, step_idx=None):
         """Quantize every worker row on the flat wire buffer.
 
-        Returns (q_wire (W, D_pad) uint8, hat_new pytree, r_new, b_new)
-        with r_new (W,) in global mode / (W, L) per_tensor.  Bit adaptation
-        (paper eq. 11) always tracks the global radius ratio.
+        Returns (q_wire (W, D_pad) uint8, hat_new pytree, r_new, b_new,
+        leaf_due) with r_new (W,) in global mode / (W, L) per_tensor.  Bit
+        adaptation (paper eq. 11) tracks the global radius ratio — or, in
+        layerwise mode, each leaf's own ratio, unless the bit-budget
+        controller (quantizer.allocate_bits) supersedes it.  leaf_due is
+        the (W, L) exchange-period gate in layerwise mode (None otherwise);
+        the codec itself always runs on every leaf with the full fresh
+        radii, so the shared uniform draw is consumed identically whatever
+        the masks — callers zero the PAYLOAD radius of unsent leaves
+        instead, which no-ops them on both endpoints.
 
         Shared uniform-draw convention: ONE jax.random.uniform draw over the
         padded (W, D_pad) buffer, consumed identically by every wire_impl —
         the jnp and Pallas paths are bit-identical.
         """
         qcfg = self.dcfg.gadmm.qcfg
+        lw = self.dcfg.layerwise
         w = self.dcfg.num_workers
         leaves = jax.tree.leaves(theta)
         treedef = jax.tree.structure(theta)
         hat_leaves = treedef.flatten_up_to(hat)
         sizes = _leaf_sizes(leaves)
+        n_leaves = len(sizes)
         per_leaf_r = self._per_leaf_radius(leaves, hat_leaves)  # (W, L)
         r_global = (jnp.max(per_leaf_r, axis=1) if per_leaf_r.shape[1]
                     else jnp.zeros((w,), jnp.float32))
-        if qcfg.adapt_bits:
+        leaf_due = None
+        if lw is not None:
+            base_b, periods, _ = self._lw_tables(tuple(sizes))
+            if lw.budget_bits is not None:
+                # budget controller: rank leaves by residual magnitude,
+                # spend the fixed wire budget best-first
+                scores = jnp.sqrt(self._per_leaf_delta2(leaves, hat_leaves))
+                b_new = allocate_bits(scores, np.asarray(sizes, np.float32),
+                                      lw.budget_bits, lw.min_bits,
+                                      lw.max_bits)              # (W, L)
+            elif lw.adapt_bits:
+                # eq. 11 per leaf: each leaf tracks its own radius ratio
+                b_new = _next_bits(self._lw_qcfg, bits_prev, per_leaf_r,
+                                   radius_prev, base_bits=base_b[None])
+            else:
+                b_new = jnp.broadcast_to(base_b[None], (w, n_leaves))
+            leaf_due = jnp.broadcast_to((step_idx % periods) == 0,
+                                        (w, n_leaves))
+            r_new = per_leaf_r
+        elif qcfg.adapt_bits:
             r_prev = (radius_prev if radius_prev.ndim == 1
                       else jnp.max(radius_prev, axis=1))
             b_new = _next_bits(qcfg, bits_prev, r_global, r_prev)  # (W,)
         else:
             b_new = jnp.full((w,), qcfg.bits, jnp.int32)
-        r_new = r_global if self.dcfg.radius_mode == "global" else per_leaf_r
+        if lw is None:
+            r_new = (r_global if self.dcfg.radius_mode == "global"
+                     else per_leaf_r)
 
         d = sum(sizes)
         if d == 0:
             return (jnp.zeros((w, 0), jnp.uint8),
                     jax.tree.unflatten(treedef, list(hat_leaves)),
-                    r_new, b_new)
+                    r_new, b_new, leaf_due)
         theta_f = self._pad_wire(self._flatten_rows(leaves, jnp.float32))
         hat_f = self._pad_wire(self._flatten_rows(hat_leaves, jnp.float32))
         d_pad = theta_f.shape[1]
         u = jax.random.uniform(key, (w, d_pad), jnp.float32)
-        if self.dcfg.radius_mode == "per_tensor":
-            # segment-scalar pass: per-leaf scalars -> per-position values;
-            # padding positions get R = 0 (codec leaves them untouched)
-            seg = np.repeat(np.arange(len(sizes)), sizes)      # (D,)
-            r_pos = self._pad_wire(per_leaf_r[:, seg])         # (W, D_pad)
-            r_arg = r_pos
-        else:
-            r_arg = r_global
+        per_tensor = self.dcfg.radius_mode == "per_tensor"
+        seg = (np.repeat(np.arange(n_leaves), sizes)           # (D,)
+               if (per_tensor or lw is not None) else None)
         if sharded:
+            # per-leaf (W, L) tables ride into the shard_map untouched and
+            # expand to per-position values on each device's local slab —
+            # the outside-expansion form below is a gather the SPMD
+            # partitioner must shard along the gathered dimension, which
+            # XLA:CPU miscompiles (see _qdq_sharded)
             q_wire, hat_new_f = self._qdq_sharded(
-                theta_f, hat_f, u, r_arg, b_new)
+                theta_f, hat_f, u,
+                per_leaf_r if per_tensor else r_global,
+                b_new, seg=seg)
         else:
+            if per_tensor:
+                # segment-scalar pass: per-leaf scalars -> per-position
+                # values; padding positions get R = 0 (codec leaves them
+                # untouched)
+                r_arg = self._pad_wire(per_leaf_r[:, seg])     # (W, D_pad)
+            else:
+                r_arg = r_global
+            b_arg = b_new
+            if lw is not None:
+                # per-position bit widths; padding gets b = 1 (levels >= 1
+                # — the codec divides by levels; R = 0 keeps them inert)
+                b_pos = b_new[:, seg]
+                if d_pad > d:
+                    b_pos = jnp.pad(b_pos, ((0, 0), (0, d_pad - d)),
+                                    constant_values=1)
+                b_arg = b_pos                                  # (W, D_pad)
             q_rows, hat_rows = [], []
             for i in range(w):
                 q_i, h_i = self._qdq_row(theta_f[i], hat_f[i], u[i],
-                                         r_arg[i], b_new[i])
+                                         r_arg[i], b_arg[i])
                 q_rows.append(q_i)
                 hat_rows.append(h_i)
             q_wire = jnp.stack(q_rows)                 # (W, D_pad) uint8
             hat_new_f = jnp.stack(hat_rows)            # (W, D_pad) f32
         hat_new = self._unflatten_cast(hat_new_f, hat_leaves, treedef)
-        return q_wire, hat_new, r_new, b_new
+        return q_wire, hat_new, r_new, b_new, leaf_due
 
     def _dequantize_all(self, q_wire, hat_copy, radius, bits):
         """Receiver-side reconstruction on the flat wire buffer against the
@@ -735,15 +895,16 @@ class QGADMMTrainer:
         hat_f = self._flatten_rows(hat_leaves, jnp.float32)    # (W, D)
         if hat_f.shape[1] == 0:
             return hat_copy
-        levels = (2.0 ** bits.astype(jnp.float32)) - 1.0       # (W,)
-        if radius.ndim == 1:
-            r_pos = radius[:, None]
+        sizes = _leaf_sizes(hat_leaves)
+        seg = np.repeat(np.arange(len(sizes)), sizes)
+        if bits.ndim == 1:
+            levels = ((2.0 ** bits.astype(jnp.float32)) - 1.0)[:, None]
         else:
-            sizes = _leaf_sizes(hat_leaves)
-            seg = np.repeat(np.arange(len(sizes)), sizes)
-            r_pos = radius[:, seg]
+            # layerwise per-leaf widths -> per-position levels
+            levels = (2.0 ** bits[:, seg].astype(jnp.float32)) - 1.0
+        r_pos = radius[:, None] if radius.ndim == 1 else radius[:, seg]
         safe_r = jnp.maximum(r_pos, 1e-30)
-        step = 2.0 * safe_r / levels[:, None]
+        step = 2.0 * safe_r / levels
         out = hat_f + step * q_wire.astype(jnp.float32) - r_pos
         out = jnp.where(r_pos > 0, out, hat_f)
         return self._unflatten_cast(out, hat_leaves, treedef)
@@ -824,7 +985,11 @@ class QGADMMTrainer:
         """Local Adam + quantize (+ censor) for the active workers;
         returns the updated state and the wire payload (exchange NOT yet
         applied).  payload['sent'] is the per-worker transmit flag — the
-        1-bit censor sideband that rides every link.
+        1-bit censor sideband that rides every link.  In layerwise mode
+        payload['leaf_sent'] is the effective (W, L) per-leaf transmit
+        mask (accounting only — receivers need nothing beyond the
+        leaf-masked radius sideband; _build_step pops it before the
+        exchange).
 
         `port_weights` (W, C) overrides the 0/1 port mask weighting the
         neighbor dual/prox terms of the local loss — partial
@@ -853,23 +1018,62 @@ class QGADMMTrainer:
         t = jnp.where(active, new_t, t)
 
         if g.quantize:
-            q_wire, hat_new, r_new, b_new = self._quantize_all(
-                theta, hat, bits, radius, key, sharded)
-            if cc is not None:
-                # CQ-GGADMM censoring: commit + transmit only when the
-                # quantized model moved past the decaying threshold.
-                # hat_new is the committed (per-leaf-cast) value, so the
-                # mask is identical for every wire_impl and on both the
-                # unsharded and sharded paths.
-                sent = active & censor_mod.transmit_mask(
-                    hat_new, hat, cc, step_idx)
+            q_wire, hat_new, r_new, b_new, leaf_due = self._quantize_all(
+                theta, hat, bits, radius, key, sharded, step_idx)
+            lw = self.dcfg.layerwise
+            if lw is not None:
+                # L-FGADMM leaf gating: a leaf is transmitted only on its
+                # period rounds, and (with per-leaf taus) only when its
+                # committed quantized delta moved past the decaying
+                # threshold.  The candidate hat is the per-leaf mix of
+                # new/old — what would actually be committed — so the
+                # worker-level censor below sees the true delta and both
+                # endpoints stay bit-synced (unsent leaves ride the payload
+                # with radius 0, a codec no-op for every receiver).
+                treedef = jax.tree.structure(hat)
+                hn = treedef.flatten_up_to(hat_new)
+                ho = treedef.flatten_up_to(hat)
+                leaf_sent = leaf_due
+                _, _, taus = self._lw_tables(
+                    tuple(_leaf_sizes(jax.tree.leaves(theta))))
+                if taus is not None:
+                    thr = taus * jnp.power(
+                        jnp.float32(lw.tau_xi),
+                        jnp.asarray(step_idx, jnp.float32))    # (L,)
+                    delta = jnp.sqrt(self._per_leaf_delta2(hn, ho))
+                    leaf_sent = leaf_sent & (delta > thr)
+                hat_cand = jax.tree.unflatten(treedef, [
+                    jnp.where(_bmask(leaf_sent[:, i], a), a, b)
+                    for i, (a, b) in enumerate(zip(hn, ho))])
+                if cc is not None:
+                    sent = active & censor_mod.transmit_mask(
+                        hat_cand, hat, cc, step_idx)
+                else:
+                    sent = active
+                eff_leaf = leaf_sent & sent[:, None]           # (W, L)
+                hat = _twhere(sent, hat_cand, hat)
+                radius = jnp.where(eff_leaf, r_new, radius)
+                bits = jnp.where(eff_leaf, b_new, bits)
+                payload = {"wire": self._finish_wire(q_wire),
+                           "radius": jnp.where(eff_leaf, r_new, 0.0),
+                           "bits": b_new, "sent": sent,
+                           "leaf_sent": eff_leaf}
             else:
-                sent = active
-            hat = _twhere(sent, hat_new, hat)
-            radius = jnp.where(_bmask(sent, r_new), r_new, radius)
-            bits = jnp.where(sent, b_new, bits)
-            payload = {"wire": self._finish_wire(q_wire),
-                       "radius": r_new, "bits": b_new, "sent": sent}
+                if cc is not None:
+                    # CQ-GGADMM censoring: commit + transmit only when the
+                    # quantized model moved past the decaying threshold.
+                    # hat_new is the committed (per-leaf-cast) value, so the
+                    # mask is identical for every wire_impl and on both the
+                    # unsharded and sharded paths.
+                    sent = active & censor_mod.transmit_mask(
+                        hat_new, hat, cc, step_idx)
+                else:
+                    sent = active
+                hat = _twhere(sent, hat_new, hat)
+                radius = jnp.where(_bmask(sent, r_new), r_new, radius)
+                bits = jnp.where(sent, b_new, bits)
+                payload = {"wire": self._finish_wire(q_wire),
+                           "radius": r_new, "bits": b_new, "sent": sent}
         else:
             # full-precision GADMM: track the would-be radius for metrics,
             # then "transmit" theta itself (hat == theta).  Censoring
@@ -1026,6 +1230,7 @@ class QGADMMTrainer:
                   state.lam_edge, state.radius, state.bits, state.opt_mu,
                   state.opt_nu, state.opt_t)
             sent_phases = []
+            leaf_phases = []   # layerwise: (eff_leaf, bits) per phase
             inbox, hat_lag = state.inbox, state.hat_lag
             part = pw = edge_part = None
             if dcfg.participation < 1.0:
@@ -1036,6 +1241,9 @@ class QGADMMTrainer:
                 st, payload, f0 = phase_compute(st, batch, mask(active), k,
                                                 state.step, port_weights=pw)
                 sent_phases.append(payload["sent"])
+                lf = payload.pop("leaf_sent", None)
+                if lf is not None:
+                    leaf_phases.append((lf, payload["bits"]))
                 if exchange is not None:
                     st = phase_apply(st, exchange(payload))
                 return st, f0
@@ -1049,7 +1257,8 @@ class QGADMMTrainer:
                 # recv-start).  Wire bits are billed below on THIS round —
                 # the round the payload is sent — never on the round it is
                 # eventually consumed.
-                st, hat_lag, f0, sent_phases, inbox = self._stale_round(
+                (st, hat_lag, f0, sent_phases, leaf_phases,
+                 inbox) = self._stale_round(
                     st, batch, state, hat_lag, k1, k2, sharded,
                     part=part, port_weights=pw, edge_part=edge_part)
             elif dcfg.mode == "gauss-seidel" and w > 1 and dcfg.overlap:
@@ -1062,10 +1271,16 @@ class QGADMMTrainer:
                 st, pl_h, f0 = phase_compute(st, batch, mask(is_head), k1,
                                              state.step, port_weights=pw)
                 sent_phases.append(pl_h["sent"])
+                lf = pl_h.pop("leaf_sent", None)
+                if lf is not None:
+                    leaf_phases.append((lf, pl_h["bits"]))
                 recv_h = exchange(pl_h)
                 st, pl_t, _ = phase_compute(st, batch, mask(~is_head), k2,
                                             state.step, port_weights=pw)
                 sent_phases.append(pl_t["sent"])
+                lf = pl_t.pop("leaf_sent", None)
+                if lf is not None:
+                    leaf_phases.append((lf, pl_t["bits"]))
                 st = phase_apply(st, recv_h)
                 st = phase_apply(st, exchange(pl_t))
                 st = dual_update(st, edge_mask=edge_part)
@@ -1105,7 +1320,8 @@ class QGADMMTrainer:
                         theta,
                         sent_phases
                         if (cc is not None or dcfg.participation < 1.0)
-                        else None),
+                        else None,
+                        leaf_phases if dcfg.layerwise is not None else None),
                     jnp.float32),
             }
             new_state = DistState(
@@ -1173,6 +1389,11 @@ class QGADMMTrainer:
         st, pl_h, f0 = phase_compute(st, batch, act_h, k1, state.step)
         st, pl_t, _ = phase_compute(st, batch, act_t, k2, state.step)
         sent_phases = [pl_h["sent"], pl_t["sent"]]
+        leaf_phases = []
+        for pl in (pl_h, pl_t):
+            lf = pl.pop("leaf_sent", None)
+            if lf is not None:
+                leaf_phases.append((lf, pl["bits"]))
 
         # ---- dual: S-stale own hat vs S-stale neighbor hat, gated off
         # during the S pipeline-fill rounds (both sides are still the
@@ -1210,7 +1431,7 @@ class QGADMMTrainer:
         inbox = jax.tree.map(
             lambda buf, new: jnp.concatenate([buf[1:], new[None]], axis=0),
             state.inbox, merged)
-        return st, hat_lag, f0, sent_phases, inbox
+        return st, hat_lag, f0, sent_phases, leaf_phases, inbox
 
     # ------------------------------------------------------- accounting ----
     def wire_row_bytes(self, d: int) -> int:
@@ -1227,7 +1448,7 @@ class QGADMMTrainer:
             return d_pad
         return 4 * d_pad
 
-    def wire_bits_per_round(self, theta, sent_phases=None):
+    def wire_bits_per_round(self, theta, sent_phases=None, leaf_phases=None):
         """Graph traffic per train step, matching the bytes on the wire.
 
         Without censoring (sent_phases=None) this bills what the ppermute
@@ -1235,10 +1456,11 @@ class QGADMMTrainer:
         gauss-seidel, 1 in jacobi; overlap still performs both phases'
         exchanges) and per direction, each of the topology's E edges carries
         one wire-buffer row (wire_row_bytes: packing + group padding
-        included) plus the quantizer sideband (R: one f32 in global mode,
-        one per tensor in per_tensor mode; b: one i32).  For the chain
-        E = W-1, the original accounting.  tests cross-check this against
-        the constructed payload buffers and core.comm_model.
+        included) plus the quantizer sideband (quantizer.header_bits: R one
+        f32 in global mode, one per tensor in per_tensor mode, plus the b
+        i32).  For the chain E = W-1, the original accounting.  tests
+        cross-check this against the constructed payload buffers and
+        core.comm_model.
 
         With censoring, `sent_phases` is the list of per-phase (W,) transmit
         masks and the result is a traced scalar modelling the censored
@@ -1247,18 +1469,45 @@ class QGADMMTrainer:
         source worker transmitted — a worker that is phase-inactive or
         censored is silent.  Directed payloads with source w per phase =
         deg(w) when sent[w], so the payload term is per_link *
-        sum_w sent[w]*deg[w]."""
+        sum_w sent[w]*deg[w].
+
+        In layerwise mode, `leaf_phases` is the list of per-phase
+        (eff_leaf (W, L) bool, bits (W, L) i32) pairs and the billing is
+        per transmitted leaf on the kernels/pack MIXED wire format
+        (pack_mixed framing, the accounting twin of mixed_packed_len):
+        every leaf slot carries a 1-bit flag on every directed edge, and a
+        transmitted leaf costs 8 * bytes_l + header_bits() where bytes_l is
+        packed_len(d_l) at <= 4 bits (nibble-packed segment) and d_l above
+        (byte-wide), each sent leaf carrying its own (R f32, b i32) header.
+        Group padding is not billed — the mixed format frames exact leaf
+        sizes."""
         w = self.dcfg.num_workers
         n_edges = self.topo.num_edges
         if n_edges == 0:
             return 0
         leaves = jax.tree.leaves(theta)
+        if leaf_phases is not None:
+            sizes = _leaf_sizes(leaves)
+            n_leaves = len(sizes)
+            bytes_pk = jnp.asarray([packed_len(int(n)) for n in sizes],
+                                   jnp.float32)
+            bytes_raw = jnp.asarray(sizes, jnp.float32)
+            deg = jnp.asarray(self.topo.degree, jnp.float32)
+            total = jnp.zeros(())
+            for eff, b in leaf_phases:
+                bytes_l = jnp.where(b <= 4, bytes_pk, bytes_raw)  # (W, L)
+                link = jnp.sum(eff.astype(jnp.float32)
+                               * (8.0 * bytes_l + header_bits()), axis=1)
+                total = (total
+                         + 2 * n_edges * n_leaves * censor_mod.FLAG_BITS
+                         + jnp.sum(deg * link))
+            return total
         d = sum(_leaf_sizes(leaves))
         row_bits = 8 * self.wire_row_bytes(d)
         if self.dcfg.gadmm.quantize:
             n_r = (len(leaves) if self.dcfg.radius_mode == "per_tensor"
                    else 1)
-            sideband = 32 * n_r + 32  # radius f32(s) + bits i32
+            sideband = header_bits(num_radii=n_r)
         else:
             sideband = 0
         per_link = row_bits + sideband

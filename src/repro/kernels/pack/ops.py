@@ -1,15 +1,17 @@
-"""Jit'd wrappers for nibble pack/unpack with impl dispatch."""
+"""Jit'd wrappers for nibble / mixed-width pack with impl dispatch."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import pack as _kernel
 from . import ref as _ref
-from .ref import packed_len
+from .ref import mixed_packed_len, packed_len
 
 Array = jax.Array
 
-__all__ = ["pack4", "unpack4", "packed_len"]
+__all__ = ["pack4", "unpack4", "packed_len",
+           "pack_mixed", "unpack_mixed", "mixed_packed_len"]
 
 
 def pack4(q: Array, *, impl: str = "pallas") -> Array:
@@ -22,3 +24,49 @@ def unpack4(packed: Array, n: int, *, impl: str = "pallas") -> Array:
     if impl == "ref":
         return _ref.unpack4_ref(packed.reshape(-1), n)
     return _kernel.unpack4(packed.reshape(-1), n, interpret=impl != "pallas_compiled")
+
+
+def pack_mixed(q: Array, sizes, bits, *, impl: str = "pallas") -> Array:
+    """Per-segment (size, bits) mixed-width packing of a flat level stream.
+
+    Segments at <= 4 bits go through the pack4 wire format (the selected
+    impl's kernel), wider segments stay byte-per-element; the framing is
+    static, shared by both endpoints (ref.pack_mixed_ref documents the
+    format and is the bitwise oracle)."""
+    if impl == "ref":
+        return _ref.pack_mixed_ref(q, sizes, bits)
+    flat = q.reshape(-1)
+    out, off = [], 0
+    for n, b in zip(sizes, bits):
+        n = int(n)
+        if n == 0:  # zero-size leaf: contributes no wire bytes
+            continue
+        seg = jax.lax.slice(flat, (off,), (off + n,))
+        out.append(pack4(seg, impl=impl) if _ref._seg_packed(b) else seg)
+        off += n
+    if not out:
+        return jnp.zeros((0,), jnp.uint8)
+    return out[0] if len(out) == 1 else jnp.concatenate(out)
+
+
+def unpack_mixed(packed: Array, sizes, bits, *, impl: str = "pallas") -> Array:
+    """Inverse of pack_mixed (same static framing)."""
+    if impl == "ref":
+        return _ref.unpack_mixed_ref(packed, sizes, bits)
+    flat = packed.reshape(-1)
+    out, off = [], 0
+    for n, b in zip(sizes, bits):
+        n = int(n)
+        if n == 0:
+            continue
+        if _ref._seg_packed(b):
+            m = packed_len(n)
+            out.append(unpack4(jax.lax.slice(flat, (off,), (off + m,)), n,
+                               impl=impl))
+            off += m
+        else:
+            out.append(jax.lax.slice(flat, (off,), (off + n,)))
+            off += n
+    if not out:
+        return jnp.zeros((0,), jnp.uint8)
+    return out[0] if len(out) == 1 else jnp.concatenate(out)

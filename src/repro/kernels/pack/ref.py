@@ -72,3 +72,65 @@ def unpack4_ref(packed: Array, n: int) -> Array:
     lo = (p2 & 0xF).astype(jnp.uint8)
     hi = (p2 >> 4).astype(jnp.uint8)
     return take_levels(lo, hi, n)
+
+
+# --------------------------------------------------- mixed bit-width wire ---
+# Layerwise (per-leaf bit width) wire format: the flat level stream is a
+# concatenation of per-leaf segments with STATIC (size, bits) framing — the
+# same framing both endpoints derive from the shared LayerwiseConfig, so no
+# extra sideband is needed.  Segments at <= 4 bits ride the pack4 nibble
+# format (packed_len bytes, 256-level granularity paid per leaf); wider
+# segments stay one byte per element.  mixed_packed_len is the accounting
+# twin the trainer's layerwise wire_bits_per_round bills per transmitted
+# leaf.
+
+
+def _seg_packed(bits: int) -> bool:
+    assert 1 <= int(bits) <= 8, bits
+    return int(bits) <= 4
+
+
+def mixed_packed_len(sizes, bits) -> int:
+    """Bytes on the wire for per-segment (size, bits) framing."""
+    assert len(sizes) == len(bits), (sizes, bits)
+    return sum(packed_len(int(n)) if _seg_packed(b) else int(n)
+               for n, b in zip(sizes, bits))
+
+
+def pack_mixed_ref(q: Array, sizes, bits) -> Array:
+    """Pack a flat uint8 level stream with per-segment bit widths.
+
+    q: (sum(sizes),) uint8 levels, each segment's values < 2^bits[i].
+    sizes/bits: static per-segment framing.  Returns a
+    (mixed_packed_len(sizes, bits),) uint8 wire buffer.
+    """
+    flat = q.reshape(-1)
+    assert flat.size == sum(int(n) for n in sizes), (flat.size, sizes)
+    out, off = [], 0
+    for n, b in zip(sizes, bits):
+        n = int(n)
+        seg = jax.lax.slice(flat, (off,), (off + n,))
+        out.append(pack4_ref(seg) if _seg_packed(b) else seg)
+        off += n
+    if not out:
+        return jnp.zeros((0,), jnp.uint8)
+    return out[0] if len(out) == 1 else jnp.concatenate(out)
+
+
+def unpack_mixed_ref(packed: Array, sizes, bits) -> Array:
+    """Inverse of pack_mixed_ref: wire buffer -> flat (sum(sizes),) levels."""
+    flat = packed.reshape(-1)
+    assert flat.size == mixed_packed_len(sizes, bits), (flat.size, sizes)
+    out, off = [], 0
+    for n, b in zip(sizes, bits):
+        n = int(n)
+        if _seg_packed(b):
+            m = packed_len(n)
+            out.append(unpack4_ref(jax.lax.slice(flat, (off,), (off + m,)), n))
+            off += m
+        else:
+            out.append(jax.lax.slice(flat, (off,), (off + n,)))
+            off += n
+    if not out:
+        return jnp.zeros((0,), jnp.uint8)
+    return out[0] if len(out) == 1 else jnp.concatenate(out)

@@ -61,6 +61,19 @@ def _kernel_vec_r(lv_ref, theta_ref, hat_ref, u_ref, r_ref, q_ref, newhat_ref):
               newhat_ref)
 
 
+def _kernel_vec_rl(theta_ref, hat_ref, u_ref, r_ref, lv_ref, q_ref,
+                   newhat_ref):
+    """Per-element radius AND levels variant: both ride in VMEM tiles.
+
+    Used by the dist trainer's layerwise mode, where each leaf owns its own
+    bit width — the per-leaf (2^b - 1) scalars are expanded into one levels
+    value per wire-buffer position, same segment-scalar gather as the
+    per_tensor radius.  Padding positions carry levels = 1 (never 0: the
+    shared math divides by levels) with R = 0 keeping them inert."""
+    _qdq_math(r_ref[...], lv_ref[...], theta_ref, hat_ref, u_ref, q_ref,
+              newhat_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_dequantize(
     theta: Array,
@@ -76,8 +89,11 @@ def quantize_dequantize(
     See ref.quantize_dequantize_ref for semantics.  `radius` is a scalar
     (one R for the whole tensor, SMEM path) or an array of theta's shape
     (per-element R, VMEM tile path — the dist trainer's per_tensor mode).
-    interpret=True executes the kernel body in Python on CPU (this
-    container); on TPU pass interpret=False.
+    `levels` is a scalar (one bit width, SMEM) or an array of theta's shape
+    (per-element levels, VMEM tile — the layerwise per-leaf bit widths); the
+    per-element-levels path always runs the vec-R kernel (a scalar radius is
+    broadcast).  interpret=True executes the kernel body in Python on CPU
+    (this container); on TPU pass interpret=False.
     """
     orig_shape = theta.shape
     n = theta.size
@@ -97,7 +113,6 @@ def quantize_dequantize(
 
     block_m = min(BLOCK_M, rows)
     grid = (-(-rows // block_m),)
-    lv2 = levels.astype(jnp.float32).reshape(1, 1)
 
     scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     tile = pl.BlockSpec((block_m, cols), lambda i: (i, 0))
@@ -105,6 +120,25 @@ def quantize_dequantize(
         jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
         jax.ShapeDtypeStruct((rows, cols), theta_hat_prev.dtype),
     ]
+    if levels.ndim > 0:
+        # layerwise per-element levels: fill padding with 1 (the math
+        # divides by levels), R = 0 keeps those positions inert
+        lv2 = to2d(levels.astype(jnp.float32), 1.0)
+        r_full = (jnp.broadcast_to(radius, theta.shape) if radius.ndim == 0
+                  else radius)
+        r2 = to2d(r_full.astype(jnp.float32), 0.0)
+        q2, newhat2 = pl.pallas_call(
+            _kernel_vec_rl,
+            grid=grid,
+            in_specs=[tile, tile, tile, tile, tile],
+            out_specs=[tile, tile],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(theta2, hat2, u2, r2, lv2)
+        q = _take_flat(q2, n).reshape(orig_shape)
+        newhat = _take_flat(newhat2, n).reshape(orig_shape)
+        return q, newhat
+    lv2 = levels.astype(jnp.float32).reshape(1, 1)
     if radius.ndim == 0:
         r2 = radius.astype(jnp.float32).reshape(1, 1)
         q2, newhat2 = pl.pallas_call(

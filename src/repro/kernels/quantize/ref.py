@@ -23,7 +23,9 @@ def quantize_dequantize_ref(
         distributed setting it is an all-reduce-max over the worker group).
         A scalar, or any shape broadcastable against theta (per-element R,
         used by the dist trainer's per_tensor radius mode).
-      levels: scalar f32, 2^b - 1.
+      levels: f32, 2^b - 1.  A scalar, or any shape broadcastable against
+        theta (per-element levels — the dist trainer's layerwise per-leaf
+        bit widths, expanded position-wise like the per_tensor radius).
 
     Returns:
       q:        uint8 levels in [0, levels]

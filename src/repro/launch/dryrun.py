@@ -22,7 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.censor import CensorConfig
 from repro.core.gadmm import GADMMConfig
-from repro.core.quantizer import QuantizerConfig
+from repro.core.quantizer import LayerwiseConfig, QuantizerConfig
 from repro.core.topology import TOPOLOGY_KINDS
 from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
 from repro.dist.serve import Server, cache_specs, serve_view
@@ -127,7 +127,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                  wire_impl: str = "jnp", reduced: bool = False,
                  topology: str = "chain",
                  censor: CensorConfig | None = None,
-                 staleness: int = 0, participation: float = 1.0):
+                 staleness: int = 0, participation: float = 1.0,
+                 layerwise: LayerwiseConfig | None = None):
     cfg = registry.get_config(
         arch, smoke=reduced, compute_dtype=jnp.bfloat16,
         param_dtype=jnp.float32, xent_mode=xent, attn_scan_remat=attn_remat,
@@ -146,7 +147,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
         local_iters=local_iters, microbatches=microbatches, mode=mode,
         state_dtype=jnp.bfloat16, uneven_shard=uneven, pack_wire=pack,
         seq_shard=seq_shard, wire_impl=wire_impl, topology=topology,
-        censor=censor, staleness=staleness, participation=participation)
+        censor=censor, staleness=staleness, participation=participation,
+        layerwise=layerwise)
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
     state_structs = jax.eval_shape(
         functools.partial(init_state,
@@ -165,7 +167,8 @@ def dryrun_train(arch: str, shape_name: str, *, multi_pod: bool,
                         t_lower=t_lower, t_compile=t_compile,
                         reduced=reduced, wire_impl=wire_impl,
                         topology=topology, censor=censor is not None,
-                        staleness=staleness),
+                        staleness=staleness,
+                        layerwise=layerwise is not None),
                    verbose=verbose)
 
 
@@ -294,16 +297,18 @@ def main(argv=None):
     ap.add_argument("--local-iters", type=int, default=1)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--xent", default="onehot", choices=["gather", "onehot"])
-    ap.add_argument("--attn-remat", action="store_true", default=True)
-    ap.add_argument("--no-attn-remat", dest="attn_remat", action="store_false")
-    ap.add_argument("--uneven", action="store_true", default=True,
+    # BooleanOptionalAction, not store_true+default=True: the latter makes
+    # the positive flag a silent no-op (same bug class as simulate.py --x64)
+    ap.add_argument("--attn-remat", default=True,
+                    action=argparse.BooleanOptionalAction)
+    ap.add_argument("--uneven", default=True,
+                    action=argparse.BooleanOptionalAction,
                     help="pad non-divisible MHA head counts (exact; masked)")
-    ap.add_argument("--no-uneven", dest="uneven", action="store_false")
-    ap.add_argument("--pack", action="store_true", default=None,
+    ap.add_argument("--pack", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="force int4 wire packing on (--no-pack forces off; "
                          "default None = DistConfig auto: packed iff "
                          "effective bits <= 4)")
-    ap.add_argument("--no-pack", dest="pack", action="store_false")
     ap.add_argument("--seq-shard", action="store_true",
                     help="sequence-parallel residual stream (train)")
     ap.add_argument("--bits", type=int, default=8)
@@ -326,12 +331,22 @@ def main(argv=None):
                     help="<1 compiles the partial-participation step "
                          "(per-round Bernoulli masks, renormalized "
                          "neighbor sums)")
+    ap.add_argument("--layerwise", action="store_true",
+                    help="L-FGADMM per-leaf wire: large leaves transmit "
+                         "every --layerwise-period rounds at per-leaf bit "
+                         "widths (DistConfig.layerwise)")
+    ap.add_argument("--layerwise-period", type=int, default=2,
+                    help="exchange period of the large leaves (top half "
+                         "of the model by parameter count)")
+    ap.add_argument("--bit-budget", type=int, default=None, metavar="BITS",
+                    help="adaptive per-leaf bit allocation under a fixed "
+                         "sum(bits_l * d_l) payload budget per "
+                         "transmission (implies --layerwise)")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke configs on 16-device meshes: records the "
                          "full 33-pair matrix on CPU (committed artifacts)")
-    ap.add_argument("--windowed-cache", action="store_true", default=True)
-    ap.add_argument("--no-windowed-cache", dest="windowed_cache",
-                    action="store_false")
+    ap.add_argument("--windowed-cache", default=True,
+                    action=argparse.BooleanOptionalAction)
     ap.add_argument("--paper-baseline", action="store_true",
                     help="disable every §Perf optimization (baseline tables)")
     ap.add_argument("--out", default=None)
@@ -366,7 +381,13 @@ def main(argv=None):
                                                       xi=args.censor_xi)
                                          if args.censor else None),
                                  staleness=args.staleness,
-                                 participation=args.participation)
+                                 participation=args.participation,
+                                 layerwise=(LayerwiseConfig(
+                                     large_leaf_period=args.layerwise_period,
+                                     budget_bits=args.bit_budget)
+                                     if args.layerwise
+                                     or args.bit_budget is not None
+                                     else None))
             else:
                 r = dryrun_serve(arch, shape, multi_pod=args.multi_pod,
                                  windowed_cache=args.windowed_cache,

@@ -11,7 +11,10 @@ import sys
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # --smoke was store_true+default=True (a no-op flag); keep --full as the
+    # established negative spelling alongside the generated --no-smoke
+    ap.add_argument("--smoke", default=True,
+                    action=argparse.BooleanOptionalAction)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)

@@ -98,10 +98,11 @@ def main(argv=None):
                     help="events = per-message loop (bitwise oracle); "
                          "vectorized = large-N array fast path "
                          "(graph mode, staleness 0, no drops)")
-    ap.add_argument("--no-record-states", dest="record_states",
-                    action="store_false", default=True,
-                    help="skip per-round state snapshots (large N; the "
-                         "objective trace is still recorded)")
+    ap.add_argument("--record-states", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="per-round state snapshots (--no-record-states "
+                         "for large N; the objective trace is still "
+                         "recorded)")
     ap.add_argument("--async-staleness", type=int, default=0,
                     help="bounded staleness S; 0 = barriered lockstep")
     ap.add_argument("--target", type=float, default=1e-4,
@@ -110,8 +111,12 @@ def main(argv=None):
                     help="exit nonzero unless the final relative objective "
                          "gap is <= GAP (CI convergence gate)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--x64", action="store_true", default=True)
-    ap.add_argument("--no-x64", dest="x64", action="store_false")
+    # NOT store_true: action="store_true" with default=True made the flag a
+    # no-op AND --x64/--no-x64 an undetectable pair (the old bug); the
+    # BooleanOptionalAction pair keeps both spellings working.
+    ap.add_argument("--x64", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the simulator in float64 (exact paper math)")
     ap.add_argument("--out", default=None, help="write summary JSON here")
     args = ap.parse_args(argv)
 

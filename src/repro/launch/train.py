@@ -48,6 +48,17 @@ def main(argv=None):
                          "<1 drops workers from random rounds with "
                          "degree-renormalized neighbor sums "
                          "(DistConfig.participation)")
+    ap.add_argument("--layerwise", action="store_true",
+                    help="L-FGADMM per-leaf wire: large leaves transmit "
+                         "every --layerwise-period rounds at per-leaf bit "
+                         "widths (DistConfig.layerwise)")
+    ap.add_argument("--layerwise-period", type=int, default=2,
+                    help="exchange period of the large leaves (top "
+                         "half of the model by parameter count)")
+    ap.add_argument("--bit-budget", type=int, default=None, metavar="BITS",
+                    help="adaptive per-leaf bit allocation under a fixed "
+                         "sum(bits_l * d_l) payload budget per "
+                         "transmission (implies --layerwise)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
@@ -63,7 +74,7 @@ def main(argv=None):
 
     from repro.core.censor import CensorConfig
     from repro.core.gadmm import GADMMConfig
-    from repro.core.quantizer import QuantizerConfig
+    from repro.core.quantizer import LayerwiseConfig, QuantizerConfig
     from repro.data.pipeline import ExtraInputs, LMShardLoader
     from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
     from repro.launch.mesh import factor_mesh, make_production_mesh
@@ -92,7 +103,11 @@ def main(argv=None):
         topology=args.topology, staleness=args.staleness,
         participation=args.participation,
         censor=(CensorConfig(tau=args.censor_tau, xi=args.censor_xi)
-                if args.censor else None))
+                if args.censor else None),
+        layerwise=(LayerwiseConfig(large_leaf_period=args.layerwise_period,
+                                   budget_bits=args.bit_budget)
+                   if args.layerwise or args.bit_budget is not None
+                   else None))
     trainer = QGADMMTrainer(model, cfg, dcfg, wmesh)
 
     loader = LMShardLoader(args.workers, args.per_worker_batch, args.seq,
@@ -133,7 +148,7 @@ def main(argv=None):
         if (step + 1) % args.log_every == 0 or step == start:
             extra = (f" skip={float(metrics['skip_rate']):.2f} "
                      f"wire_bits={float(metrics['wire_bits_per_round']):.3g}"
-                     if args.censor else "")
+                     if args.censor or dcfg.layerwise is not None else "")
             print(f"step {step + 1}: loss={float(metrics['loss']):.4f} "
                   f"resid={float(metrics['consensus_resid']):.4f} "
                   f"R={float(metrics['radius_mean']):.5f}"

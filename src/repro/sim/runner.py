@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gadmm
+from repro.core import gadmm, quantizer
 from repro.core.censor import FLAG_BITS, CensorConfig
 from repro.core.comm_model import RadioConfig
 from repro.core.topology import (DENSE_PLACEMENT_MAX, Placement, Topology,
@@ -363,7 +363,7 @@ def trainer_link_bits(trainer, d: int) -> float:
         n_r = (len(jax.tree.leaves(trainer.model.init(
             jax.random.PRNGKey(0), trainer.cfg)))
             if trainer.dcfg.radius_mode == "per_tensor" else 1)
-        return row_bits + 32 * n_r + 32
+        return row_bits + quantizer.header_bits(num_radii=n_r)
     return row_bits
 
 

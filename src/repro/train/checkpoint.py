@@ -47,14 +47,35 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
-    """`like` provides the pytree structure (and dtypes for casting)."""
+    """`like` provides the pytree structure (and dtypes for casting).
+
+    Raises ValueError naming the offending leaf when the checkpoint does not
+    match `like` (leaf count, per-leaf shape, or sidecar tree paths), instead
+    of silently mis-assigning arrays to leaves or failing deep inside a cast.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     with np.load(path) as data:
         arrays = [data[f"a{i}"] for i in range(len(data.files))]
-    flat, treedef = jax.tree_util.tree_flatten(like)
+    names, flat, treedef = _flatten_with_names(like)
     if len(flat) != len(arrays):
-        raise ValueError(f"checkpoint has {len(arrays)} leaves, "
-                         f"expected {len(flat)}")
+        raise ValueError(
+            f"checkpoint {path} has {len(arrays)} leaves, expected "
+            f"{len(flat)}: the saved tree structure does not match `like`")
+    meta_path = path + ".json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            saved_names = json.load(f).get("names")
+        if saved_names is not None and list(saved_names) != names:
+            diff = next((i, s, n) for i, (s, n)
+                        in enumerate(zip(saved_names, names)) if s != n)
+            raise ValueError(
+                f"checkpoint {path} tree paths do not match `like`: "
+                f"leaf {diff[0]} saved as {diff[1]!r}, expected {diff[2]!r}")
+    for name, a, l in zip(names, arrays, flat):
+        if tuple(a.shape) != tuple(np.shape(l)):
+            raise ValueError(
+                f"checkpoint {path} leaf {name!r} has shape {tuple(a.shape)},"
+                f" expected {tuple(np.shape(l))}")
     leaves = [np.asarray(a, dtype=l.dtype) for a, l in zip(arrays, flat)]
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:

@@ -206,6 +206,35 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_restore_mismatch_errors(tmp_path):
+    """Regression: restore used to mis-assign arrays (or die deep inside an
+    np cast) when `like` didn't match the checkpoint; it must instead raise
+    a ValueError naming the offending leaf / structure difference."""
+    import jax
+    import jax.numpy as jnp
+    import pytest as _pytest
+
+    from repro.train import checkpoint
+
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((4,))}
+    checkpoint.save(str(tmp_path), 1, tree)
+    # leaf count mismatch
+    with _pytest.raises(ValueError, match="leaves"):
+        checkpoint.restore(str(tmp_path), 1, {"a": tree["a"]})
+    # per-leaf shape mismatch, error names the leaf path
+    bad_shape = {"a": jnp.zeros((3, 2)), "b": tree["b"]}
+    with _pytest.raises(ValueError, match=r"\['a'\].*shape"):
+        checkpoint.restore(str(tmp_path), 1, bad_shape)
+    # same structure arity but different tree paths (sidecar names check)
+    renamed = {"a": tree["a"], "z": tree["b"]}
+    with _pytest.raises(ValueError, match="tree paths"):
+        checkpoint.restore(str(tmp_path), 1, renamed)
+    # matching `like` still restores
+    back = checkpoint.restore(str(tmp_path), 1,
+                              jax.tree.map(jnp.zeros_like, tree))
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+
+
 def test_data_pipeline_shapes():
     from repro.data.pipeline import LMShardLoader
 

@@ -110,6 +110,75 @@ def test_topology_and_censor_axes_in_cli_matrix():
     assert "OK" in r.stdout
 
 
+def test_boolean_flags_have_working_negatives():
+    """Regression: several launchers declared store_true flags with
+    default=True — the positive spelling was a silent no-op and the negative
+    pair was hand-rolled (or missing: simulate's --x64/--no-x64 were two
+    independent store_trues).  BooleanOptionalAction generates both
+    spellings; the help text is the observable contract."""
+    code = """
+        import contextlib, io
+
+        def help_text(main):
+            buf = io.StringIO()
+            with contextlib.redirect_stdout(buf):
+                try:
+                    main(["--help"])
+                except SystemExit:
+                    pass
+            return buf.getvalue()
+
+        from repro.launch import dryrun, serve, simulate, train
+        t = help_text(simulate.main)
+        assert "--x64" in t and "--no-x64" in t, t[-500:]
+        assert "--record-states" in t and "--no-record-states" in t
+        t = help_text(dryrun.main)
+        for flag in ("--attn-remat", "--no-attn-remat", "--uneven",
+                     "--no-uneven", "--pack", "--no-pack",
+                     "--windowed-cache", "--no-windowed-cache",
+                     "--layerwise", "--layerwise-period", "--bit-budget"):
+            assert flag in t, flag
+        t = help_text(serve.main)
+        assert "--no-smoke" in t and "--full" in t  # --full kept working
+        t = help_text(train.main)
+        for flag in ("--layerwise", "--layerwise-period", "--bit-budget"):
+            assert flag in t, flag
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=240, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_reduced_smoke_compile_layerwise():
+    """One reduced train pair compiles end-to-end with the layerwise
+    (L-FGADMM) wire — the --layerwise / --bit-budget sweep axis is
+    CPU-recordable like the other committed artifacts."""
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.core.quantizer import LayerwiseConfig
+        from repro.launch.dryrun import dryrun_train
+        r = dryrun_train("qwen1.5-4b", "train_4k", multi_pod=False,
+                         workers=8, reduced=True, bits=4,
+                         layerwise=LayerwiseConfig(large_leaf_period=2,
+                                                   budget_bits=2_000_000),
+                         verbose=False)
+        assert r["layerwise"] is True
+        assert r["collective_bytes_per_device"] > 0
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=540, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
 def test_reduced_smoke_compile_topology_censor():
     """One reduced (16-device smoke mesh) train pair compiles end-to-end on
     a censored ring topology — the new sweep axes are CPU-recordable just

@@ -140,6 +140,95 @@ def test_quantize_vector_radius_matches_ref(dtype):
                                   np.asarray(hat[300:]))
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_vector_levels_matches_ref(dtype):
+    """Per-element levels (the trainer's layerwise per-leaf bit widths) agree
+    bitwise between the Pallas tile kernel and the ref — under jit on both
+    sides: eager XLA fuses the step arithmetic differently (FMA), so the
+    parity contract is jitted-ref == kernel, which is also how the trainer
+    runs both impls."""
+    key = jax.random.PRNGKey(13)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n = 700
+    theta = jax.random.normal(k1, (n,)).astype(dtype)
+    hat = (0.5 * jax.random.normal(k2, (n,))).astype(dtype)
+    diff = jnp.abs(theta.astype(jnp.float32) - hat.astype(jnp.float32))
+    # three "leaves" of 300 + 300 + 100 elements: own radius AND own bits,
+    # the last one masked out (radius 0 = unsent leaf)
+    radius = jnp.concatenate([jnp.full((300,), jnp.max(diff[:300])),
+                              jnp.full((300,), jnp.max(diff[300:600])),
+                              jnp.zeros((100,), jnp.float32)])
+    levels = jnp.concatenate([jnp.full((300,), 15.0),
+                              jnp.full((300,), 3.0),
+                              jnp.ones((100,), jnp.float32)])
+    u = jax.random.uniform(k3, (n,), jnp.float32)
+    q_r, hat_r = jax.jit(q_ref.quantize_dequantize_ref)(
+        theta, hat, u, radius, levels)
+    q_p, hat_p = jax.jit(
+        lambda *a: q_kernel.quantize_dequantize(*a, interpret=True))(
+        theta, hat, u, radius, levels)
+    np.testing.assert_array_equal(np.asarray(q_r), np.asarray(q_p))
+    np.testing.assert_array_equal(
+        np.asarray(hat_r, np.float32).view(np.uint8),
+        np.asarray(hat_p, np.float32).view(np.uint8))
+    assert int(jnp.max(q_p[:300])) <= 15 and int(jnp.max(q_p[300:600])) <= 3
+    # masked leaf: q == 0 and hat untouched
+    np.testing.assert_array_equal(np.asarray(q_p[600:]), 0)
+    np.testing.assert_array_equal(np.asarray(hat_p[600:]),
+                                  np.asarray(hat[600:]))
+
+
+SEGS = [  # (sizes, bits) mixed-width framing cases
+    ((256,), (4,)),
+    ((100, 200), (2, 8)),
+    ((7, 0, 300, 65), (8, 4, 3, 5)),
+    ((0, 0), (1, 8)),
+    ((1000, 1, 129), (4, 1, 6)),
+]
+
+
+@pytest.mark.parametrize("sizes,bits", SEGS)
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_pack_mixed_roundtrip(sizes, bits, impl):
+    """pack_mixed/unpack_mixed round-trip under the static (size, bits)
+    framing, with mixed_packed_len as the wire-length contract; zero-size
+    segments contribute no bytes (regression: the pack4 kernel divides by
+    zero on an empty input)."""
+    n = sum(sizes)
+    key = jax.random.PRNGKey(n + 1)
+    segs = []
+    for i, (sz, b) in enumerate(zip(sizes, bits)):
+        segs.append(jax.random.randint(jax.random.fold_in(key, i), (sz,),
+                                       0, 2 ** b).astype(jnp.uint8))
+    q = jnp.concatenate(segs) if segs else jnp.zeros((0,), jnp.uint8)
+    pk = pack_ops.pack_mixed(q, sizes, bits, impl=impl)
+    assert pk.size == pack_ops.mixed_packed_len(sizes, bits), (sizes, bits)
+    un = pack_ops.unpack_mixed(pk, sizes, bits, impl=impl)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(q))
+
+
+@pytest.mark.parametrize("sizes,bits", SEGS)
+def test_pack_mixed_impl_parity(sizes, bits):
+    """ref and pallas produce byte-identical mixed wire buffers."""
+    n = sum(sizes)
+    q = jax.random.randint(jax.random.PRNGKey(n + 2), (n,), 0, 2).astype(
+        jnp.uint8)
+    pk_r = pack_ops.pack_mixed(q, sizes, bits, impl="ref")
+    pk_p = pack_ops.pack_mixed(q, sizes, bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(pk_r), np.asarray(pk_p))
+
+
+def test_mixed_packed_len_formula():
+    """<=4-bit segments pay the pack4 nibble format (128*ceil(n/256) bytes),
+    wider segments one byte per element, zero-size segments nothing."""
+    assert pack_ops.mixed_packed_len((), ()) == 0
+    assert pack_ops.mixed_packed_len((0,), (4,)) == 0
+    assert pack_ops.mixed_packed_len((256,), (4,)) == 128
+    assert pack_ops.mixed_packed_len((257,), (4,)) == 256
+    assert pack_ops.mixed_packed_len((257,), (5,)) == 257
+    assert pack_ops.mixed_packed_len((100, 200), (2, 8)) == 128 + 200
+
+
 def test_kernel_block_shape_alignment():
     """Kernel tiles are (m,128) lane-aligned for every input size."""
     for n in (1, 127, 128, 129, 12345):

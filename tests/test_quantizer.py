@@ -104,11 +104,14 @@ def test_bit_growth_rule():
 
 
 def test_payload_bits():
-    """Header = 32 (R) + 32 more only when bits adapt — one rule, shared with
-    gadmm.bits_per_round."""
+    """Header = 32 (R) + 32 (bits), unconditionally: the payload dict always
+    carries `bits`, so it is always billed — one rule, shared with
+    gadmm.bits_per_round and dist.qgadmm.wire_bits_per_round."""
     cfg = Q.QuantizerConfig(bits=2)
-    assert Q.payload_bits(cfg, 1000) == 2032
-    assert Q.payload_bits(8, 10) == 112
+    assert Q.payload_bits(cfg, 1000) == 2064
+    assert Q.payload_bits(8, 10) == 144
     adaptive = Q.QuantizerConfig(bits=2, adapt_bits=True)
     assert Q.payload_bits(adaptive, 1000) == 2064
     assert Q.payload_bits(8, 10, adapt_bits=True) == 144
+    # per-tensor radius mode bills one f32 radius per tensor
+    assert Q.header_bits(num_radii=3) == 32 * 3 + 32

@@ -285,6 +285,98 @@ def test_unsharded_reference_vs_jit_train_step_censored():
     assert "DONE" in r.stdout
 
 
+def test_sharded_per_tensor_bit_sync_regression():
+    """Regression: the sharded codec used to expand per-leaf radii/bits to
+    per-position values OUTSIDE its shard_map — a gather whose output is
+    sharded along the gathered dimension, which XLA:CPU's SPMD partitioner
+    miscompiles inside the fused step.  Senders quantized against garbage
+    radii while receivers decoded with the true sideband, so every sharded
+    per_tensor (and hence layerwise) run silently desynced by O(radius)
+    per step and the consensus residual grew without bound.  The invariant
+    that broke: after any number of sharded steps, every stored neighbor
+    copy hat_edge[e] tracks the sender's own committed hat[src[e]].
+
+    Tolerance note: bitwise sender==receiver equality is an UNSHARDED-mode
+    property.  Sharded mode has always had last-ulp drift in BOTH radius
+    modes (the sender's hat comes out of the kernel inside shard_map, the
+    receiver's decode is plain jnp under the SPMD jit — XLA fuses the two
+    differently), so this asserts a tight tolerance that last-ulp drift
+    passes and the old O(radius) garbage fails by orders of magnitude."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.launch.mesh import factor_mesh
+        from repro.dist.qgadmm import DistConfig, QGADMMTrainer, init_state
+        from repro.core.gadmm import GADMMConfig
+        from repro.core.quantizer import LayerwiseConfig, QuantizerConfig
+
+        class MixedModel:
+            @staticmethod
+            def init(key, cfg):
+                k1, k2, k3 = jax.random.split(key, 3)
+                return {
+                    "wa": jax.random.normal(k1, (8, 4), jnp.float32),
+                    "wb": (0.1 * jax.random.normal(k2, (4, 6))
+                           ).astype(jnp.bfloat16),
+                    "bias": jax.random.normal(k3, (6,), jnp.float32),
+                }
+
+            @staticmethod
+            def loss_fn(params, batch, cfg):
+                h = batch["x"] @ params["wa"]
+                h = h @ params["wb"].astype(jnp.float32) + params["bias"]
+                return jnp.mean((h.sum(-1) - batch["y"]) ** 2)
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ("data", "model"))
+        wmesh = factor_mesh(mesh, num_workers=4)
+        batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8)),
+                 "y": jax.random.normal(jax.random.PRNGKey(2), (4, 8))}
+
+        variants = {
+            "per_tensor": dict(radius_mode="per_tensor"),
+            "layerwise": dict(layerwise=LayerwiseConfig(
+                bits=(4, 2, 3), periods=(1, 2, 1))),
+        }
+        for name, extra in variants.items():
+            dcfg = DistConfig(num_workers=4,
+                              gadmm=GADMMConfig(rho=0.5, quantize=True,
+                                                qcfg=QuantizerConfig(bits=4),
+                                                alpha=0.01),
+                              local_iters=2, local_lr=1e-2, **extra)
+            tr = QGADMMTrainer(MixedModel, None, dcfg, wmesh)
+            st = init_state(lambda k: MixedModel.init(k, None),
+                            jax.random.PRNGKey(0), dcfg)
+            st, b = tr.place(st, batch)
+            step = tr.jit_train_step(st, b)
+            for _ in range(4):
+                st, m = step(st, b)
+            src = np.asarray(tr.eidx.src)
+            hat = jax.device_get(st.theta_hat)
+            edge = jax.device_get(st.hat_edge)
+            for ha, he in zip(jax.tree.leaves(hat), jax.tree.leaves(edge)):
+                a = np.asarray(jnp.asarray(ha, jnp.float32))[src]
+                e = np.asarray(jnp.asarray(he, jnp.float32))
+                np.testing.assert_allclose(
+                    a, e, rtol=1e-5, atol=1e-6,
+                    err_msg=f"{name}: receiver copy != sender hat")
+            print("OK", name)
+        print("DONE")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "DONE" in r.stdout
+
+
 def test_zero_size_leaf_regression():
     """A pytree containing a (0,) leaf must train in both the quantized and
     the full-precision (metrics-radius) branch of phase()."""
@@ -351,6 +443,32 @@ def test_wire_accounting_matches_actual_payload(pack_wire, quantize,
     # the metric reports the same number
     _, metrics = _run(tr, state, batch, steps=1)
     assert int(metrics["wire_bits_per_round"]) == expected
+
+
+@pytest.mark.parametrize("radius_mode", ["global", "per_tensor"])
+def test_core_and_dist_bill_identical_bits(radius_mode):
+    """Regression (wire-accounting reconciliation): core's payload_bits /
+    header_bits and the dist trainer's wire_bits_per_round now report the
+    SAME bits for the same payload in both radius modes — core used to
+    elide the 32-bit b sideband when adapt_bits was off, diverging from
+    dist by one word per transmission."""
+    from repro.core import quantizer as Q
+
+    tr, state, _ = _setup(
+        gadmm=GADMMConfig(rho=0.5, quantize=True,
+                          qcfg=QuantizerConfig(bits=8), alpha=0.01),
+        pack_wire=False, radius_mode=radius_mode)
+    leaves = jax.tree.leaves(state.theta)
+    d = sum(int(np.prod(l.shape[1:])) for l in leaves)
+    # unpacked uint8 wire: one byte per (group-padded) element, so the
+    # per-link bits are exactly core's 8-bit payload over d_pad elements
+    d_pad = tr.wire_row_bytes(d)
+    n_r = len(leaves) if radius_mode == "per_tensor" else 1
+    per_link = Q.payload_bits(8, d_pad, num_radii=n_r)
+    assert tr.wire_bits_per_round(state.theta) == 2 * 2 * (4 - 1) * per_link
+    # and the header rule itself is shared, adapt_bits or not
+    assert Q.header_bits(num_radii=n_r) == 32 * n_r + 32
+    assert Q.header_bits(adapt_bits=False, num_radii=n_r) == 32 * n_r + 32
 
 
 @pytest.mark.parametrize("topology", ["chain", "ring"])
