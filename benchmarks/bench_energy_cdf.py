@@ -314,8 +314,11 @@ def main_sim(quick=False):
               f"gap={r['final_rel_gap']:.2e};"
               f"wall={r['bench_wall_s']:.1f}s")
     if not quick:
-        with open("BENCH_sim.json", "w") as f:
-            json.dump({"scenarios": scenarios, "scale": scale}, f, indent=1)
+        # schema-validated write: obs.record pins the committed artifact's
+        # shape (exactly the scenarios + scale sections CI gates on)
+        from repro.obs.record import write_bench
+        write_bench("BENCH_sim.json",
+                    {"scenarios": scenarios, "scale": scale}, "sim")
     print("bench_sim_json,0," + ("quick smoke (artifact untouched)"
                                  if quick else "wrote BENCH_sim.json"))
 

@@ -159,8 +159,10 @@ def run(d=4096, w=4, quick=False):
     # _run_layouts), so only the full run records the committed artifact —
     # CI gates on its state_layout section showing the edge win on star
     if not quick:
-        with open("BENCH_wire.json", "w") as f:
-            json.dump(records, f, indent=1)
+        # schema-validated write: obs.record pins the committed artifact's
+        # shape (a new section must extend validate_bench_wire first)
+        from repro.obs.record import write_bench
+        write_bench("BENCH_wire.json", records, "wire")
     rows.append(("bench_wire_json", 0,
                  "quick smoke (artifact untouched)" if quick
                  else "wrote BENCH_wire.json"))

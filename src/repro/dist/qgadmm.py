@@ -201,6 +201,17 @@ class DistConfig:
                  Composes with censor (worker-level threshold on the
                  leaf-masked candidate commit), staleness (the masked
                  radius rides the inbox ring) and participation.
+    telemetry:   extend the step metrics with the observability counters
+                 (repro.obs): billed wire bits split into payload/header/
+                 flags, per-worker transmit mask and directed-link
+                 counts, dual-residual norm, participation popcount,
+                 per-leaf bit allocation under layerwise.  All of them
+                 are pure functions of values the step already computes —
+                 the state stream is bitwise-identical either way; False
+                 keeps the original minimal metrics dict.
+    check_invariants: run the repro.obs.checks live invariants on this
+                 trainer's drained metric windows (the launch CLIs also
+                 honor env REPRO_CHECK=1).
     """
 
     num_workers: int
@@ -221,6 +232,8 @@ class DistConfig:
     staleness: int = 0
     participation: float = 1.0
     layerwise: LayerwiseConfig | None = None
+    telemetry: bool = True
+    check_invariants: bool = False
 
     def __post_init__(self):
         assert 0.0 < self.participation <= 1.0, self.participation
@@ -1324,6 +1337,46 @@ class QGADMMTrainer:
                         leaf_phases if dcfg.layerwise is not None else None),
                     jnp.float32),
             }
+            if dcfg.telemetry:
+                sp = (sent_phases
+                      if (cc is not None or dcfg.participation < 1.0)
+                      else None)
+                lp = leaf_phases if dcfg.layerwise is not None else None
+                pay, hdr, flg = self.wire_bits_components(theta, sp, lp)
+                deg = jnp.asarray(topo.degree, jnp.float32)
+                sent_any = (sum(s.astype(jnp.float32) for s in sent_phases)
+                            if sent_phases else jnp.zeros((w,), jnp.float32))
+                dual_sq = jnp.zeros(())
+                if self.eidx.num_directed:
+                    hm = self._d_sign > 0
+                    dual_sq = dual_sq + sum(jax.tree.leaves(jax.tree.map(
+                        lambda a, b: jnp.sum(
+                            _bmask(hm, a)
+                            * (a.astype(jnp.float32)
+                               - b.astype(jnp.float32)) ** 2),
+                        lam_edge, state.lam_edge)))
+                metrics.update({
+                    "wire_bits_payload": jnp.asarray(pay, jnp.float32),
+                    "wire_bits_header": jnp.asarray(hdr, jnp.float32),
+                    "wire_bits_flags": jnp.asarray(flg, jnp.float32),
+                    # directed links that carried payload / stayed silent
+                    "tx_links": jnp.asarray(
+                        sum(jnp.sum(s.astype(jnp.float32) * deg)
+                            for s in sent_phases), jnp.float32),
+                    "skip_links": jnp.sum((1.0 - sent_any) * deg),
+                    # (W,) per-worker transmit mask: per-edge censor skip
+                    # counts expand host-side via the static edge index
+                    "worker_sent": sent_any,
+                    "dual_resid": jnp.sqrt(dual_sq),
+                    "participants": (jnp.sum(part.astype(jnp.float32))
+                                     if part is not None
+                                     else jnp.asarray(float(w),
+                                                      jnp.float32)),
+                })
+                if dcfg.layerwise is not None:
+                    # (L,) mean allocated bits per leaf across workers
+                    metrics["leaf_bits"] = jnp.mean(
+                        bits.astype(jnp.float32), axis=0)
             new_state = DistState(
                 theta=theta, theta_hat=hat, hat_edge=hat_edge,
                 lam_edge=lam_edge, radius=radius, bits=bits,
@@ -1520,3 +1573,54 @@ class QGADMMTrainer:
             total = (total + 2 * n_edges * censor_mod.FLAG_BITS
                      + per_link * jnp.sum(sent.astype(jnp.float32) * deg))
         return total
+
+    def wire_bits_components(self, theta, sent_phases=None,
+                             leaf_phases=None):
+        """``wire_bits_per_round`` split into its (payload, header, flags)
+        terms — the repro.obs telemetry/invariant decomposition.  Mirrors
+        the three billing branches above argument-for-argument;
+        payload + header + flags reassembles the total (bit-exactly on
+        the static branch, up to float summation order on the traced
+        censored/layerwise branches — obs.checks compares under a 1e-6
+        relative tolerance).  Kept separate from ``wire_bits_per_round``
+        so the committed exact-accounting expectations never change."""
+        n_edges = self.topo.num_edges
+        zero = jnp.zeros(())
+        if n_edges == 0:
+            return zero, zero, zero
+        leaves = jax.tree.leaves(theta)
+        if leaf_phases is not None:
+            sizes = _leaf_sizes(leaves)
+            n_leaves = len(sizes)
+            bytes_pk = jnp.asarray([packed_len(int(n)) for n in sizes],
+                                   jnp.float32)
+            bytes_raw = jnp.asarray(sizes, jnp.float32)
+            deg = jnp.asarray(self.topo.degree, jnp.float32)
+            pay, hdr, flg = zero, zero, 0.0
+            for eff, b in leaf_phases:
+                bytes_l = jnp.where(b <= 4, bytes_pk, bytes_raw)  # (W, L)
+                e = eff.astype(jnp.float32)
+                pay = pay + jnp.sum(deg * jnp.sum(e * 8.0 * bytes_l,
+                                                  axis=1))
+                hdr = hdr + jnp.sum(deg * jnp.sum(e, axis=1)
+                                    * header_bits())
+                flg += 2 * n_edges * n_leaves * censor_mod.FLAG_BITS
+            return pay, hdr, jnp.asarray(float(flg))
+        d = sum(_leaf_sizes(leaves))
+        row_bits = 8 * self.wire_row_bytes(d)
+        if self.dcfg.gadmm.quantize:
+            n_r = (len(leaves) if self.dcfg.radius_mode == "per_tensor"
+                   else 1)
+            sideband = header_bits(num_radii=n_r)
+        else:
+            sideband = 0
+        if sent_phases is None:
+            n_phases = 2 if self.dcfg.mode == "gauss-seidel" else 1
+            links = n_phases * 2 * n_edges
+            return (jnp.asarray(float(row_bits * links)),
+                    jnp.asarray(float(sideband * links)), zero)
+        deg = jnp.asarray(self.topo.degree, jnp.float32)
+        links = sum(jnp.sum(s.astype(jnp.float32) * deg)
+                    for s in sent_phases)
+        flg = len(sent_phases) * 2 * n_edges * censor_mod.FLAG_BITS
+        return row_bits * links, sideband * links, jnp.asarray(float(flg))

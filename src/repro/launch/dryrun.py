@@ -350,6 +350,9 @@ def main(argv=None):
     ap.add_argument("--paper-baseline", action="store_true",
                     help="disable every §Perf optimization (baseline tables)")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export per-pair lower/compile wall-time spans as "
+                         "a Chrome trace-event file (Perfetto-loadable)")
     args = ap.parse_args(argv)
     if args.paper_baseline:
         args.xent, args.attn_remat, args.uneven = "gather", False, False
@@ -403,6 +406,27 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, default=str)
         print(f"wrote {args.out}")
+    if args.trace:
+        # compile-time capture: one lower + one compile span per pair,
+        # laid end to end (the pairs ran sequentially above)
+        from repro.obs import trace as obs_trace
+        events = [{"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+                   "args": {"name": "dryrun"}}]
+        ts = 0.0
+        for r in results:
+            if "error" in r:
+                continue
+            for field, label in (("t_lower", "lower"),
+                                 ("t_compile", "compile")):
+                dur = float(r.get(field, 0.0)) * 1e6
+                events.append({
+                    "name": f"{r['arch']}/{r['shape']}:{label}",
+                    "ph": "X", "pid": 1, "tid": 0, "ts": ts, "dur": dur,
+                    "args": {"arch": r["arch"], "shape": r["shape"],
+                             "seconds": float(r.get(field, 0.0))}})
+                ts += dur
+        obs_trace.write_trace(args.trace, events)
+        print(f"wrote {args.trace}")
     ok = sum(1 for r in results if "error" not in r)
     print(f"{ok}/{len(results)} pairs compiled successfully")
     return 0 if ok == len(results) else 1

@@ -1,0 +1,158 @@
+"""Summarize / diff repro.obs JSONL runs — the bench-regression triage
+tool.
+
+  PYTHONPATH=src python -m repro.launch.report RUN.jsonl
+  PYTHONPATH=src python -m repro.launch.report A.jsonl B.jsonl --target 1e-4
+
+One run: prints the manifest provenance and the headline statistics
+(rounds-to-target, bits/round percentiles, skip rate, step-time
+percentiles).  Two runs: the same rows side by side with the B/A ratio —
+a wire-bits or step-time regression shows up as a ratio, not as two
+walls of JSON to eyeball.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.obs.record import validate_run
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) else None
+
+
+def summarize(recs: list[dict], target: float | None = None) -> dict:
+    """Headline statistics of one validated run (manifest + records)."""
+    man = recs[0]
+    steps = [r for r in recs if r["kind"] == "step"]
+    rounds = [r for r in recs if r["kind"] == "round"]
+    summaries = [r["summary"] for r in recs if r["kind"] == "summary"]
+
+    def metric(name):
+        return [r["metrics"][name] for r in steps
+                if isinstance(r["metrics"].get(name), (int, float))]
+
+    out: dict = {
+        "records": len(recs),
+        "steps": len(steps),
+        "rounds": len(rounds),
+    }
+    bits = metric("wire_bits_per_round")
+    if bits:
+        out["wire_bits_p50"] = _pct(bits, 50)
+        out["wire_bits_p90"] = _pct(bits, 90)
+    skip = metric("skip_rate")
+    if skip:
+        out["skip_rate_mean"] = float(np.mean(skip))
+    loss = metric("loss")
+    if loss:
+        out["loss_first"], out["loss_last"] = loss[0], loss[-1]
+    wall = [r["wall_s"] for r in steps
+            if isinstance(r.get("wall_s"), (int, float))]
+    if wall:
+        out["step_s_p50"] = _pct(wall, 50)
+        out["step_s_p90"] = _pct(wall, 90)
+    if rounds:
+        rl = [(r["round"], r.get("loss"), r.get("t_s")) for r in rounds]
+        losses = [l for _, l, _ in rl if isinstance(l, (int, float))]
+        if losses:
+            out["loss_last"] = losses[-1]
+        if target is not None:
+            hit = next((r for r in rounds
+                        if isinstance(r.get("loss"), (int, float))
+                        and r["loss"] <= target), None)
+            out["rounds_to_target"] = (
+                float(hit["round"] + 1) if hit else float("inf"))
+            if hit and isinstance(hit.get("t_s"), (int, float)):
+                out["time_to_target_s"] = hit["t_s"]
+    if target is not None and loss:
+        hit = next((r for r in steps
+                    if isinstance(r["metrics"].get("loss"), (int, float))
+                    and r["metrics"]["loss"] <= target), None)
+        out["rounds_to_target"] = (float(hit["step"] + 1) if hit
+                                   else float("inf"))
+    for s in summaries:
+        for k in ("total_bits", "total_energy_j", "makespan_s",
+                  "s_per_step", "final_rel_gap"):
+            if isinstance(s.get(k), (int, float)):
+                out[k] = s[k]
+        tt = s.get("to_target")
+        if isinstance(tt, dict) and "round" in tt:
+            out.setdefault("rounds_to_target", tt["round"])
+    out["_provenance"] = {
+        "config_hash": man.get("config_hash"),
+        "git_sha": man.get("git_sha"),
+        "topology": man.get("topology"),
+        "seed": man.get("seed"),
+        "cli": man.get("cli"),
+    }
+    return out
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def print_report(a: dict, b: dict | None = None) -> None:
+    keys = [k for k in a if not k.startswith("_")]
+    if b is not None:
+        keys += [k for k in b if not k.startswith("_") and k not in keys]
+    width = max(len(k) for k in keys) + 2
+    if b is None:
+        for k in keys:
+            print(f"  {k:<{width}} {_fmt(a.get(k))}")
+        return
+    print(f"  {'':<{width}} {'A':>12} {'B':>12} {'B/A':>8}")
+    for k in keys:
+        va, vb = a.get(k), b.get(k)
+        ratio = "-"
+        if isinstance(va, (int, float)) and isinstance(vb, (int, float)) \
+                and va not in (0, float("inf")) and np.isfinite(va) \
+                and np.isfinite(vb):
+            ratio = f"{vb / va:.3f}"
+        print(f"  {k:<{width}} {_fmt(va):>12} {_fmt(vb):>12} {ratio:>8}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="summarize / compare repro.obs JSONL runs")
+    ap.add_argument("runs", nargs="+", metavar="RUN.jsonl",
+                    help="one run to summarize, or two to diff (A B)")
+    ap.add_argument("--target", type=float, default=None,
+                    help="loss target defining rounds-to-target")
+    args = ap.parse_args(argv)
+    if len(args.runs) > 2:
+        ap.error("expected one or two runs")
+
+    loaded = []
+    for path in args.runs:
+        recs = validate_run(path)
+        loaded.append((path, summarize(recs, target=args.target)))
+
+    for path, s in loaded:
+        p = s["_provenance"]
+        topo = p.get("topology") or {}
+        print(f"== {path}: {p.get('cli') or 'run'} "
+              f"cfg={p.get('config_hash')} git={p.get('git_sha')} "
+              f"topo={topo.get('kind')}x{topo.get('num_workers')} "
+              f"seed={p.get('seed')} ==")
+    a = loaded[0][1]
+    if len(loaded) == 1:
+        print_report(a)
+        return 0
+    b = loaded[1][1]
+    if a["_provenance"]["config_hash"] != b["_provenance"]["config_hash"]:
+        print("  note: different config hashes — comparing across configs")
+    print_report(a, b)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -118,6 +118,13 @@ def main(argv=None):
                     action=argparse.BooleanOptionalAction,
                     help="run the simulator in float64 (exact paper math)")
     ap.add_argument("--out", default=None, help="write summary JSON here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write repro.obs/v1 JSONL run records here "
+                         "(manifest, per-round records, summary)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the simulated timeline as a Chrome "
+                         "trace-event file (one track per worker, "
+                         "per-link flow arrows; Perfetto-loadable)")
     args = ap.parse_args(argv)
 
     if args.x64:
@@ -178,6 +185,40 @@ def main(argv=None):
     worst = int(np.argmax(per))
     print(f"  per-worker J: mean {np.mean(per):.3g}, "
           f"max {per[worst]:.3g} (worker {worst})")
+    if args.metrics_out:
+        from repro.obs import record
+        manifest = record.manifest_record(
+            scfg, seed=args.seed, topology=args.topology, num_workers=n,
+            extra={"cli": "launch.simulate", "censored": censor is not None,
+                   "quantized": not args.no_quantize, "bits": args.bits})
+        times = res.timeline.global_round_times()
+        with record.MetricsLog(path=args.metrics_out,
+                               manifest=manifest) as mlog:
+            for k, loss in enumerate(np.asarray(res.losses).tolist()):
+                mlog.write(record.round_record(
+                    k, t_s=(times[k] if k < len(times) else None),
+                    loss=loss,
+                    metrics={"energy_j": res.timeline.energy_until(times[k])
+                             if k < len(times) else None}))
+            mlog.close(summary={**s, "final_rel_gap":
+                                (res.final_rel_gap()
+                                 if len(res.losses) else None),
+                                "to_target": tt})
+        print(f"wrote {args.metrics_out}")
+    trace_events = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        trace_events = obs_trace.timeline_trace(res.timeline)
+        obs_trace.write_trace(args.trace, trace_events)
+        print(f"wrote {args.trace} ({len(trace_events)} events)")
+    from repro.obs import checks
+    if checks.enabled():
+        checks.check_timeline(res.timeline)
+        if trace_events is not None:
+            checks.check_trace(trace_events, res.timeline)
+        print("REPRO_CHECK: timeline conservation"
+              + (" + trace accounting" if trace_events is not None else "")
+              + " OK")
     if args.out:
         s.update(topology=args.topology, workers=n,
                  staleness=args.async_staleness, loss=args.loss,

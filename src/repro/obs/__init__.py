@@ -1,0 +1,20 @@
+"""repro.obs — unified run telemetry.
+
+One observability path for the trainer, the discrete-event sim and the
+benchmarks: structured JSONL run records (``obs.record``, schema
+``repro.obs/v1``), Chrome trace-event export (``obs.trace``), and opt-in
+live invariants (``obs.checks``, env ``REPRO_CHECK=1``)."""
+from repro.obs import checks, record, trace
+from repro.obs.record import (MetricsLog, bench_record, manifest_record,
+                              round_record, step_record, summary_record,
+                              validate_record, validate_run)
+from repro.obs.trace import (TraceWriter, load_trace, timeline_trace,
+                             validate_trace, write_trace)
+
+__all__ = [
+    "checks", "record", "trace",
+    "MetricsLog", "bench_record", "manifest_record", "round_record",
+    "step_record", "summary_record", "validate_record", "validate_run",
+    "TraceWriter", "load_trace", "timeline_trace", "validate_trace",
+    "write_trace",
+]

@@ -1,0 +1,162 @@
+"""Opt-in live invariants (``REPRO_CHECK=1`` or DistConfig.check_invariants).
+
+Promotes the accounting the test suite cross-checks offline into runtime
+guards the CLIs can run on real traffic:
+
+  * ``check_step_window`` — every drained step's billed
+    ``wire_bits_per_round`` must equal payload + header + flags, and the
+    non-layerwise components must match the closed-form recomputation
+    from the constructed wire row (8 * wire_row_bytes + quantizer
+    sideband per transmitted directed link, censor.FLAG_BITS per flag).
+  * ``check_edge_mirrors`` — edge-state conservation: the two directed
+    rows of every undirected edge hold the SAME canonical head->tail
+    dual, bitwise (the lockstep mirror property PR 6's layout depends
+    on).
+  * ``check_timeline`` / ``check_trace`` — sim-side conservation: summary
+    aggregates equal the per-transmission field sums, and the exported
+    Perfetto trace bills exactly ``Timeline.total_bits()``.
+
+All checks raise ``ObsCheckError`` with the offending numbers.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+ENV_FLAG = "REPRO_CHECK"
+
+
+class ObsCheckError(AssertionError):
+    pass
+
+
+def enabled(dcfg=None) -> bool:
+    if os.environ.get(ENV_FLAG, "") == "1":
+        return True
+    return bool(dcfg is not None
+                and getattr(dcfg, "check_invariants", False))
+
+
+def _close(name: str, got: float, want: float, rtol: float = 1e-6) -> None:
+    if not np.isclose(got, want, rtol=rtol, atol=1e-6):
+        raise ObsCheckError(f"repro.obs check failed: {name}: "
+                            f"got {got!r}, want {want!r}")
+
+
+# ------------------------------------------------------- trainer invariants -
+def check_step_window(trainer, state, records) -> None:
+    """Cross-check a drained window of step records against the wire
+    format's closed form.  ``records`` are host-side step records (the
+    return of MetricsLog.drain())."""
+    import jax
+    from repro.core import censor as censor_mod
+    from repro.core.quantizer import header_bits
+
+    dcfg = trainer.dcfg
+    n_edges = trainer.topo.num_edges
+    if n_edges == 0 or not records:
+        return
+    leaves = jax.tree.leaves(state.theta)
+    d = sum(int(np.prod(l.shape[1:])) for l in leaves)
+    row_bits = 8 * trainer.wire_row_bytes(d)
+    n_r = len(leaves) if dcfg.radius_mode == "per_tensor" else 1
+    sideband = header_bits(num_radii=n_r) if dcfg.gadmm.quantize else 0
+    n_phases = 2 if dcfg.mode == "gauss-seidel" else 1
+    dynamic = dcfg.censor is not None or dcfg.participation < 1.0
+    for rec in records:
+        m = rec["metrics"]
+        need = ("wire_bits_per_round", "wire_bits_payload",
+                "wire_bits_header", "wire_bits_flags")
+        if any(k not in m for k in need):
+            raise ObsCheckError("repro.obs check needs telemetry metrics "
+                                f"{need}; enable DistConfig.telemetry")
+        total = m["wire_bits_per_round"]
+        payload, header, flags = (m["wire_bits_payload"],
+                                  m["wire_bits_header"],
+                                  m["wire_bits_flags"])
+        _close(f"step {rec['step']}: payload+header+flags == total",
+               payload + header + flags, total)
+        if dcfg.layerwise is not None:
+            n_leaves = len(leaves)
+            _close(f"step {rec['step']}: layerwise flag bits",
+                   flags,
+                   n_phases * 2 * n_edges * n_leaves * censor_mod.FLAG_BITS)
+            continue
+        links = m["tx_links"] if dynamic else n_phases * 2 * n_edges
+        _close(f"step {rec['step']}: payload == row_bits * links",
+               payload, row_bits * links)
+        _close(f"step {rec['step']}: header == sideband * links",
+               header, sideband * links)
+        _close(f"step {rec['step']}: flag bits",
+               flags,
+               n_phases * 2 * n_edges * censor_mod.FLAG_BITS
+               if dynamic else 0.0)
+
+
+def check_edge_mirrors(trainer, state) -> None:
+    """Edge-state conservation: the two directed rows of every edge hold
+    the same canonical head->tail dual.  Both endpoints apply the same
+    increment each round (dual_update), but one endpoint computes it from
+    its locally-quantized hat and the other from the decoded wire copy,
+    so the mirror agrees to float rounding, not bitwise — the tolerance
+    is a few ulps per step relative to the dual's scale, far below the
+    O(increment) divergence an actual desync produces."""
+    import jax
+
+    eidx = trainer.eidx
+    if not eidx.num_directed:
+        return
+    row = {(int(s), int(t)): i
+           for i, (s, t) in enumerate(zip(eidx.src, eidx.dst))}
+    rev = np.asarray([row[(int(t), int(s))]
+                      for s, t in zip(eidx.src, eidx.dst)], np.int64)
+    lam = jax.device_get(state.lam_edge)
+    for i, leaf in enumerate(jax.tree.leaves(lam)):
+        a = np.asarray(leaf, np.float64)
+        if a.size == 0:                       # zero-size leaves carry no dual
+            continue
+        tol = 1e-3 * float(np.max(np.abs(a))) + 1e-8
+        diff = np.abs(a[rev] - a).reshape(len(rev), -1).max(axis=1)
+        if np.any(diff > tol):
+            bad = np.flatnonzero(diff > tol)
+            raise ObsCheckError(
+                f"repro.obs check failed: lam_edge mirror broken on leaf "
+                f"{i}, directed rows {bad[:8].tolist()} (of "
+                f"{eidx.num_directed}), max diff {diff.max():.3e} > "
+                f"{tol:.3e}")
+
+
+# ----------------------------------------------------------- sim invariants -
+def check_timeline(timeline) -> None:
+    """Summary aggregates == per-transmission field sums, and per-worker
+    round completion times are monotone."""
+    f = timeline.tx_fields()
+    _close("timeline total_bits", timeline.total_bits(),
+           float(np.sum(f["bits"])), rtol=1e-9)
+    _close("timeline total_energy_j", timeline.total_energy_j(),
+           float(np.sum(f["energy_j"])), rtol=1e-9)
+    _close("timeline per_worker_energy sum",
+           float(np.sum(timeline.per_worker_energy_j())),
+           timeline.total_energy_j(), rtol=1e-9)
+    if timeline.retransmissions() != int(np.sum(f["attempt"] > 0)):
+        raise ObsCheckError("repro.obs check failed: retransmission count")
+    times = timeline.global_round_times()
+    if any(b < a for a, b in zip(times, times[1:])):
+        raise ObsCheckError("repro.obs check failed: global round times "
+                            "not monotone")
+
+
+def check_trace(events, timeline) -> None:
+    """The exported trace is Perfetto-valid and bills exactly the
+    timeline's bits (skipped if the trace was truncated)."""
+    from repro.obs.trace import trace_tx_bits, validate_trace
+
+    validate_trace({"traceEvents": events})
+    n_tx = len(timeline.tx_fields()["t"])
+    n_spans = sum(1 for ev in events
+                  if ev.get("ph") == "X" and ev.get("pid") == 0)
+    if n_spans < n_tx:      # truncated export: bits won't reconcile
+        return
+    _close("trace tx bits == timeline.total_bits()",
+           trace_tx_bits(events), timeline.total_bits(), rtol=1e-9)

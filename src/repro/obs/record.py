@@ -1,0 +1,320 @@
+"""Structured run records: append-only JSONL under ``repro.obs/v1``.
+
+Every run artifact the repo emits — trainer metrics, sim round traces,
+benchmark sections — goes through one schema so the report CLI, the CI
+validators and future regression gates all read the same shape.  A run
+file is newline-delimited JSON whose FIRST line is always the manifest
+(config + stable hash, git SHA, jax versions, platform, seed, topology);
+subsequent lines are ``step``/``round`` records and an optional closing
+``summary``.
+
+`MetricsLog` is the writer.  Its contract with the jitted trainer step:
+``append(step, metrics)`` stores the device arrays without looking at
+them (no host sync); ``drain()`` fetches the whole pending window with
+ONE batched ``jax.device_get`` and writes the step records.  Telemetry
+therefore costs one transfer per ``log_every`` steps instead of a sync
+per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import platform as _platform
+import subprocess
+import time
+from typing import Any
+
+SCHEMA = "repro.obs/v1"
+RECORD_KINDS = ("manifest", "step", "round", "summary", "bench")
+
+
+# ----------------------------------------------------------- jsonify --------
+def _jsonify(x):
+    """Best-effort conversion of metric values (numpy/jax scalars and
+    arrays, dataclasses, tuples) to plain JSON types."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return {k: _jsonify(v) for k, v in dataclasses.asdict(x).items()}
+    if isinstance(x, dict):
+        return {str(k): _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if hasattr(x, "tolist"):       # numpy scalar/array, jax host array
+        return _jsonify(x.tolist())
+    if hasattr(x, "item"):
+        return _jsonify(x.item())
+    return repr(x)
+
+
+def config_hash(cfg: Any) -> str:
+    """Stable 12-hex digest of a config dict/dataclass: canonical JSON
+    (sorted keys, repr fallback for exotic leaves) through sha256."""
+    blob = json.dumps(_jsonify(cfg), sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=5)
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------- record constructors ---
+def manifest_record(config: Any = None, *, seed: int | None = None,
+                    topology: str | None = None,
+                    num_workers: int | None = None,
+                    extra: dict | None = None) -> dict:
+    """First line of every run file.  Captures enough to re-run and to
+    refuse apples-to-oranges diffs in the report CLI."""
+    try:
+        import jax
+        import jaxlib
+        jv, jlv, backend = (jax.__version__, jaxlib.__version__,
+                            jax.default_backend())
+    except Exception:                                     # pragma: no cover
+        jv = jlv = backend = None
+    cfg = _jsonify(config) if config is not None else {}
+    rec = {
+        "schema": SCHEMA,
+        "kind": "manifest",
+        "config": cfg,
+        "config_hash": config_hash(config) if config is not None else None,
+        "git_sha": _git_sha(),
+        "jax_version": jv,
+        "jaxlib_version": jlv,
+        "backend": backend,
+        "platform": _platform.platform(),
+        "seed": seed,
+        "topology": {"kind": topology, "num_workers": num_workers},
+        "time_unix": time.time(),
+    }
+    if extra:
+        rec.update(_jsonify(extra))
+    return rec
+
+
+def step_record(step: int, metrics: dict, *, wall_s: float | None = None
+                ) -> dict:
+    return {"schema": SCHEMA, "kind": "step", "step": int(step),
+            "wall_s": wall_s, "metrics": _jsonify(metrics)}
+
+
+def round_record(rnd: int, *, t_s: float | None = None,
+                 loss: float | None = None, metrics: dict | None = None
+                 ) -> dict:
+    return {"schema": SCHEMA, "kind": "round", "round": int(rnd),
+            "t_s": t_s, "loss": _jsonify(loss),
+            "metrics": _jsonify(metrics or {})}
+
+
+def summary_record(summary: dict) -> dict:
+    return {"schema": SCHEMA, "kind": "summary",
+            "summary": _jsonify(summary)}
+
+
+def bench_record(bench: str, payload: Any) -> dict:
+    """Wrapper for a benchmark section (``bench_wire`` rows, ``bench_sim``
+    scenario dicts) — the committed BENCH_*.json keep their historical
+    shapes; this record carries them inside the schema envelope."""
+    return {"schema": SCHEMA, "kind": "bench", "bench": str(bench),
+            "payload": _jsonify(payload)}
+
+
+# ----------------------------------------------------------- validation -----
+def _fail(msg: str, rec) -> None:
+    raise ValueError(f"repro.obs: invalid record: {msg}: "
+                     f"{json.dumps(rec, default=repr)[:200]}")
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate_record(rec: dict) -> dict:
+    """Schema check used by MetricsLog.write, the tests, and CI.  Returns
+    the record so call sites can chain it."""
+    if not isinstance(rec, dict):
+        _fail("not a dict", rec)
+    if rec.get("schema") != SCHEMA:
+        _fail(f"schema != {SCHEMA!r}", rec)
+    kind = rec.get("kind")
+    if kind not in RECORD_KINDS:
+        _fail(f"kind {kind!r} not in {RECORD_KINDS}", rec)
+    if kind == "manifest":
+        if not isinstance(rec.get("config"), dict):
+            _fail("manifest.config must be a dict", rec)
+        topo = rec.get("topology")
+        if not isinstance(topo, dict) or "kind" not in topo \
+                or "num_workers" not in topo:
+            _fail("manifest.topology needs kind/num_workers", rec)
+        ch = rec.get("config_hash")
+        if ch is not None and not (isinstance(ch, str) and len(ch) == 12):
+            _fail("manifest.config_hash must be 12 hex chars", rec)
+    elif kind == "step":
+        if not isinstance(rec.get("step"), int):
+            _fail("step.step must be an int", rec)
+        m = rec.get("metrics")
+        if not isinstance(m, dict) or not m:
+            _fail("step.metrics must be a non-empty dict", rec)
+        for k, v in m.items():
+            if not (_is_num(v) or isinstance(v, list)):
+                _fail(f"step.metrics[{k!r}] must be number or list", rec)
+    elif kind == "round":
+        if not isinstance(rec.get("round"), int):
+            _fail("round.round must be an int", rec)
+        if rec.get("t_s") is not None and not _is_num(rec["t_s"]):
+            _fail("round.t_s must be a number", rec)
+    elif kind == "summary":
+        if not isinstance(rec.get("summary"), dict):
+            _fail("summary.summary must be a dict", rec)
+    elif kind == "bench":
+        if not isinstance(rec.get("bench"), str):
+            _fail("bench.bench must be a string", rec)
+        if "payload" not in rec:
+            _fail("bench.payload missing", rec)
+    # every record must survive a JSON round-trip unchanged
+    if json.loads(json.dumps(rec)) != rec:
+        _fail("record is not JSON round-trippable", rec)
+    return rec
+
+
+def validate_run(path: str) -> list[dict]:
+    """Validate a JSONL run file: every line a valid record, first line
+    the manifest.  Returns the parsed records."""
+    with open(path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    if not recs:
+        raise ValueError(f"repro.obs: empty run file {path}")
+    for rec in recs:
+        validate_record(rec)
+    if recs[0]["kind"] != "manifest":
+        raise ValueError(f"repro.obs: first record of {path} must be the "
+                         f"manifest, got {recs[0]['kind']!r}")
+    return recs
+
+
+# ----------------------------------------------- committed BENCH_* shapes ---
+def validate_bench_wire(doc) -> None:
+    """Shape of the committed BENCH_wire.json: a list of row dicts; plain
+    rows carry impl/arch timing fields, section rows ('state_layout',
+    'layerwise') their own fixed keys.  CI gates depend on these shapes —
+    new sections must extend this validator."""
+    if not isinstance(doc, list) or not doc:
+        raise ValueError("BENCH_wire.json must be a non-empty list")
+    known = {None, "state_layout", "layerwise"}
+    for row in doc:
+        if not isinstance(row, dict):
+            raise ValueError(f"BENCH_wire row must be a dict: {row!r}")
+        section = row.get("section")
+        if section not in known:
+            raise ValueError(f"BENCH_wire: unknown section {section!r} "
+                             f"(extend validate_bench_wire)")
+        if section is None and not {"impl", "num_workers"} <= set(row):
+            raise ValueError(
+                f"BENCH_wire plain row needs impl/num_workers: {row!r}")
+
+
+def validate_bench_sim(doc) -> None:
+    """Shape of the committed BENCH_sim.json: exactly the 'scenarios' and
+    'scale' sections (the CI gate asserts this set literally)."""
+    if not isinstance(doc, dict) or set(doc) != {"scenarios", "scale"}:
+        raise ValueError("BENCH_sim.json must have exactly the "
+                         "'scenarios' and 'scale' sections, got "
+                         f"{sorted(doc) if isinstance(doc, dict) else doc!r}")
+    for key in ("scenarios", "scale"):
+        rows = doc[key]
+        if not isinstance(rows, list) \
+                or not all(isinstance(r, dict) for r in rows):
+            raise ValueError(f"BENCH_sim.{key} must be a list of row dicts")
+    if not doc["scenarios"]:
+        raise ValueError("BENCH_sim.scenarios must be non-empty")
+
+
+def write_bench(path: str, doc, kind: str) -> None:
+    """Validate-then-write for the benchmark writers.  The committed
+    artifact content stays EXACTLY what it always was (CI parses it
+    directly); the schema envelope is enforced at write time via
+    bench_record/validate_record on the same payload."""
+    validate_record(bench_record(kind, doc))
+    {"wire": validate_bench_wire, "sim": validate_bench_sim}[kind](
+        _jsonify(doc))
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+
+
+# ------------------------------------------------------------ MetricsLog ----
+class MetricsLog:
+    """Append-only JSONL writer with a no-sync device-side buffer.
+
+    path=None keeps records in memory only (``self.records``) — the tests
+    and the parity suites use that mode.  ``append`` never touches the
+    arrays; ``drain`` fetches the whole window in one ``jax.device_get``.
+    """
+
+    def __init__(self, path: str | None = None, manifest: dict | None = None,
+                 log_every: int = 10) -> None:
+        assert log_every >= 1, log_every
+        self.path = path
+        self.log_every = int(log_every)
+        self.records: list[dict] = []
+        self._fh = open(path, "w") if path else None
+        self._pending: list[tuple[int, dict]] = []
+        self._last_drain = time.perf_counter()
+        if manifest is not None:
+            self.write(manifest)
+
+    # -- writer ---------------------------------------------------------
+    def write(self, rec: dict) -> dict:
+        validate_record(rec)
+        self.records.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, default=repr) + "\n")
+            self._fh.flush()
+        return rec
+
+    # -- jit-side buffer ------------------------------------------------
+    def append(self, step: int, metrics: dict) -> None:
+        """Buffer one step's device metrics.  NO host sync happens here —
+        the dict values stay device arrays until drain()."""
+        self._pending.append((int(step), metrics))
+
+    def maybe_drain(self, step: int) -> list[dict]:
+        if (step + 1) % self.log_every == 0:
+            return self.drain()
+        return []
+
+    def drain(self) -> list[dict]:
+        """One batched device_get over the pending window; returns the
+        step records written (newest last)."""
+        if not self._pending:
+            return []
+        import jax
+        steps = [s for s, _ in self._pending]
+        host = jax.device_get([m for _, m in self._pending])
+        now = time.perf_counter()
+        wall = (now - self._last_drain) / len(self._pending)
+        self._last_drain = now
+        out = [self.write(step_record(s, m, wall_s=wall))
+               for s, m in zip(steps, host)]
+        self._pending.clear()
+        return out
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self, summary: dict | None = None) -> None:
+        self.drain()
+        if summary is not None:
+            self.write(summary_record(summary))
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

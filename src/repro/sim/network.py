@@ -154,11 +154,11 @@ class Network:
 
     # ------------------------------------------------------------ sending --
     def _tx(self, t: float, src: int, dst: int, bits: float, dist_m: float,
-            attempt: int) -> float:
+            attempt: int, rnd: int = -1) -> float:
         e = tx_energy(bits, dist_m, self.bw_share(src), self.radio.slot_s,
                       self.radio.noise_psd)
         self.timeline.record_tx(t, src, dst, bits, e, self.radio.slot_s,
-                                attempt)
+                                attempt, rnd=rnd)
         return e
 
     def _deliver(self, src: int, dst: int, t_ready: float, msg) -> None:
@@ -198,12 +198,14 @@ class Network:
         """
         t0 = self.engine.now
         slot = self.radio.slot_s
+        rnd = int(getattr(msg, "rnd", -1))
         nbrs = [int(j) for j in self.topo.neighbors(src)]
         if not nbrs:
             return t0
         t_busy = t0
         if self.ncfg.transport == "broadcast":
-            self._tx(t0, src, -1, bits, float(self._bcast_dist[src]), 0)
+            self._tx(t0, src, -1, bits, float(self._bcast_dist[src]), 0,
+                     rnd=rnd)
             t_busy = t0 + slot
             late: list[tuple[int, int]] = []
             for j in nbrs:
@@ -216,7 +218,7 @@ class Network:
             for j, a in late:
                 for k in range(a - 1):
                     self._tx(t_busy, src, j, bits,
-                             self._link_dist[(src, j)], k + 1)
+                             self._link_dist[(src, j)], k + 1, rnd=rnd)
                     t_busy += slot
                 self._deliver(src, j, t_busy, msg)
         else:
@@ -224,7 +226,7 @@ class Network:
                 a = self._attempts(src, j)
                 for k in range(a):
                     self._tx(t_busy, src, j, bits,
-                             self._link_dist[(src, j)], k)
+                             self._link_dist[(src, j)], k, rnd=rnd)
                     t_busy += slot
                 self._deliver(src, j, t_busy, msg)
         return t_busy

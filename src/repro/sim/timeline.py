@@ -2,8 +2,8 @@
 
 Collects, as the simulation plays out:
 
-  * every transmission (time, source, bits, Joules, airtime) — priced by
-    sim.network through core.comm_model.tx_energy,
+  * every transmission (time, source, bits, Joules, airtime, round) —
+    priced by sim.network through core.comm_model.tx_energy,
   * every per-worker round completion (wall-clock time of worker w
     finishing round k),
   * per-round state snapshots (optional; the bit-parity tests and the
@@ -12,14 +12,23 @@ Collects, as the simulation plays out:
 and derives the paper-facing summaries: per-worker wall-clock and Joules,
 cumulative-energy curves, and time/energy-to-target once the runner
 attaches an objective trace.
+
+Two backings share one query implementation (``TimelineBase``):
+``Timeline`` keeps a Python ``TxRecord`` per message (the events
+engine), ``ArrayTimeline`` keeps flat numpy arrays (the vectorized
+engine, O(1) Python objects in N).  Every query — and the obs.trace
+Perfetto export — goes through ``tx_fields()``, the canonical
+transmission-log accessor, so the two engines cannot drift.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 from typing import Any
 
 import numpy as np
+
+_TX_FIELDS = ("t", "src", "dst", "bits", "energy_j", "airtime_s",
+              "attempt", "rnd")
 
 
 @dataclasses.dataclass
@@ -31,170 +40,73 @@ class TxRecord:
     energy_j: float
     airtime_s: float
     attempt: int    # 0 = first transmission, >= 1 = retransmission
+    rnd: int = -1   # algorithm round the payload belongs to (-1 = unknown)
 
 
-class Timeline:
-    def __init__(self, n: int) -> None:
-        self.n = n
-        self.tx: list[TxRecord] = []
-        # round_done[w] = list of completion times, index = round
-        self.round_done: list[list[float]] = [[] for _ in range(n)]
-        self.snapshots: dict[int, dict[int, Any]] = {}  # round -> worker -> snap
-        self.dropped_at: dict[int, float] = {}
+class TimelineBase:
+    """Shared queries over the canonical transmission log.
 
-    # ----------------------------------------------------------- recording --
-    def record_tx(self, t: float, src: int, dst: int, bits: float,
-                  energy_j: float, airtime_s: float, attempt: int) -> None:
-        self.tx.append(TxRecord(t, src, dst, bits, energy_j, airtime_s,
-                                attempt))
+    Subclasses provide ``n``, ``tx_fields()`` (time-ordered — both
+    engines record with a monotone clock), ``dropped_at``, and the
+    round-completion queries (their backings differ)."""
 
-    def record_round(self, worker: int, rnd: int, t: float) -> None:
-        done = self.round_done[worker]
-        assert rnd == len(done), (worker, rnd, len(done))
-        done.append(t)
+    n: int
+    dropped_at: dict[int, float]
 
-    def record_snapshot(self, worker: int, rnd: int, snap: Any) -> None:
-        self.snapshots.setdefault(rnd, {})[worker] = snap
+    def tx_fields(self) -> dict[str, np.ndarray]:
+        """The transmission log as flat numpy arrays (keys ``_TX_FIELDS``),
+        in recording order == time order."""
+        raise NotImplementedError
 
-    def record_drop(self, worker: int, t: float) -> None:
-        self.dropped_at[worker] = t
-
-    # ------------------------------------------------------------- queries --
-    def total_energy_j(self) -> float:
-        return float(sum(r.energy_j for r in self.tx))
-
-    def total_bits(self) -> float:
-        return float(sum(r.bits for r in self.tx))
-
-    def retransmissions(self) -> int:
-        return sum(1 for r in self.tx if r.attempt > 0)
-
-    def per_worker_energy_j(self) -> list[float]:
-        out = [0.0] * self.n
-        for r in self.tx:
-            out[r.src] += r.energy_j
-        return out
-
+    # ------------------------------------------------------------- rounds --
     def makespan_s(self) -> float:
-        ends = [d[-1] for d in self.round_done if d]
-        return max(ends) if ends else 0.0
+        raise NotImplementedError
 
     def rounds_completed(self) -> list[int]:
-        return [len(d) for d in self.round_done]
+        raise NotImplementedError
 
     def global_round_times(self) -> list[float]:
         """t[k] = wall-clock at which EVERY non-dropped worker finished
         round k (the barrier view of an async run; in barriered mode this
         is just the slowest worker per round)."""
-        alive = [w for w in range(self.n) if w not in self.dropped_at]
-        counted = alive if alive else range(self.n)
-        k_max = min((len(self.round_done[w]) for w in counted), default=0)
-        return [max(self.round_done[w][k] for w in counted)
-                for k in range(k_max)]
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- queries --
+    def total_energy_j(self) -> float:
+        return float(np.sum(self.tx_fields()["energy_j"]))
+
+    def total_bits(self) -> float:
+        return float(np.sum(self.tx_fields()["bits"]))
+
+    def retransmissions(self) -> int:
+        return int(np.sum(self.tx_fields()["attempt"] > 0))
+
+    def per_worker_energy_j(self) -> list[float]:
+        f = self.tx_fields()
+        return np.bincount(f["src"], weights=f["energy_j"],
+                           minlength=self.n).tolist()
 
     def energy_until(self, t: float) -> float:
         """Joules spent up to wall-clock t (transmissions are billed at
         their start time)."""
-        return float(sum(r.energy_j for r in self.tx if r.t <= t))
+        t_sorted, cum = self._cum_energy_arr()
+        j = int(np.searchsorted(t_sorted, t, side="right"))
+        return float(cum[j - 1]) if j else 0.0
+
+    def _cum_energy_arr(self) -> tuple[np.ndarray, np.ndarray]:
+        f = self.tx_fields()
+        order = np.argsort(f["t"], kind="stable")
+        return f["t"][order], np.cumsum(f["energy_j"][order])
 
     def _cum_energy(self) -> tuple[list[float], list[float]]:
-        times, cum, acc = [], [], 0.0
-        for r in sorted(self.tx, key=lambda r: r.t):
-            acc += r.energy_j
-            times.append(r.t)
-            cum.append(acc)
-        return times, cum
+        t_sorted, cum = self._cum_energy_arr()
+        return t_sorted.tolist(), cum.tolist()
 
     def to_target(self, losses: list[float], target: float
                   ) -> dict[str, float]:
         """First global round whose objective gap <= target, with its
         wall-clock time and the Joules spent until then.  Misses flow
         through as inf (the convention the benchmarks aggregate on)."""
-        times = self.global_round_times()
-        tx_t, tx_cum = self._cum_energy()
-        for k, loss in enumerate(losses[: len(times)]):
-            if loss <= target:
-                t = times[k]
-                j = bisect.bisect_right(tx_t, t)
-                return {"round": float(k + 1), "time_s": t,
-                        "energy_j": tx_cum[j - 1] if j else 0.0}
-        return {"round": float("inf"), "time_s": float("inf"),
-                "energy_j": float("inf")}
-
-    def summary(self) -> dict:
-        return {
-            "total_energy_j": self.total_energy_j(),
-            "total_bits": self.total_bits(),
-            "retransmissions": self.retransmissions(),
-            "makespan_s": self.makespan_s(),
-            "rounds_completed": self.rounds_completed(),
-            "per_worker_energy_j": self.per_worker_energy_j(),
-            "dropped": dict(self.dropped_at),
-        }
-
-
-class ArrayTimeline:
-    """Array-backed accountant for the vectorized engine (sim.vectorized).
-
-    Same query API as :class:`Timeline`, but backed by flat numpy arrays
-    instead of one Python TxRecord per message — the number of Python
-    objects is O(1) in N and in the transmission count.  The vectorized
-    engine has no link-layer drops (membership changes are participation
-    schedules), so ``dropped_at`` is always empty; snapshots, when
-    recorded, live on the runner side.
-    """
-
-    def __init__(self, n: int, round_done: np.ndarray, tx_t: np.ndarray,
-                 tx_src: np.ndarray, tx_bits: np.ndarray,
-                 tx_energy: np.ndarray, tx_attempt: np.ndarray) -> None:
-        self.n = int(n)
-        self.round_done_arr = np.asarray(round_done, float)  # (rounds, N)
-        self.tx_t = np.asarray(tx_t, float)
-        self.tx_src = np.asarray(tx_src, np.int64)
-        self.tx_bits = np.asarray(tx_bits, float)
-        self.tx_energy = np.asarray(tx_energy, float)
-        self.tx_attempt = np.asarray(tx_attempt, np.int64)
-        self.dropped_at: dict[int, float] = {}
-        order = np.argsort(self.tx_t, kind="stable")
-        self._t_sorted = self.tx_t[order]
-        self._cum = np.cumsum(self.tx_energy[order])
-
-    # ------------------------------------------------------------- queries --
-    def total_energy_j(self) -> float:
-        return float(self.tx_energy.sum())
-
-    def total_bits(self) -> float:
-        return float(self.tx_bits.sum())
-
-    def retransmissions(self) -> int:
-        return int((self.tx_attempt > 0).sum())
-
-    def per_worker_energy_j(self) -> list[float]:
-        return np.bincount(self.tx_src, weights=self.tx_energy,
-                           minlength=self.n).tolist()
-
-    def makespan_s(self) -> float:
-        if not self.round_done_arr.size:
-            return 0.0
-        return float(self.round_done_arr[-1].max())
-
-    def rounds_completed(self) -> list[int]:
-        return [int(self.round_done_arr.shape[0])] * self.n
-
-    def global_round_times(self) -> list[float]:
-        if not self.round_done_arr.size:
-            return []
-        return self.round_done_arr.max(axis=1).tolist()
-
-    def energy_until(self, t: float) -> float:
-        j = int(np.searchsorted(self._t_sorted, t, side="right"))
-        return float(self._cum[j - 1]) if j else 0.0
-
-    def _cum_energy(self) -> tuple[list[float], list[float]]:
-        return self._t_sorted.tolist(), self._cum.tolist()
-
-    def to_target(self, losses: list[float], target: float
-                  ) -> dict[str, float]:
         times = self.global_round_times()
         for k, loss in enumerate(losses[: len(times)]):
             if loss <= target:
@@ -212,5 +124,115 @@ class ArrayTimeline:
             "makespan_s": self.makespan_s(),
             "rounds_completed": self.rounds_completed(),
             "per_worker_energy_j": self.per_worker_energy_j(),
-            "dropped": {},
+            "dropped": dict(self.dropped_at),
         }
+
+
+class Timeline(TimelineBase):
+    def __init__(self, n: int) -> None:
+        self.n = n
+        self.tx: list[TxRecord] = []
+        # round_done[w] = list of completion times, index = round
+        self.round_done: list[list[float]] = [[] for _ in range(n)]
+        self.snapshots: dict[int, dict[int, Any]] = {}  # round -> worker -> snap
+        self.dropped_at: dict[int, float] = {}
+        self._fields_cache: tuple[int, dict[str, np.ndarray]] | None = None
+
+    # ----------------------------------------------------------- recording --
+    def record_tx(self, t: float, src: int, dst: int, bits: float,
+                  energy_j: float, airtime_s: float, attempt: int,
+                  rnd: int = -1) -> None:
+        self.tx.append(TxRecord(t, src, dst, bits, energy_j, airtime_s,
+                                attempt, rnd))
+
+    def record_round(self, worker: int, rnd: int, t: float) -> None:
+        done = self.round_done[worker]
+        assert rnd == len(done), (worker, rnd, len(done))
+        done.append(t)
+
+    def record_snapshot(self, worker: int, rnd: int, snap: Any) -> None:
+        self.snapshots.setdefault(rnd, {})[worker] = snap
+
+    def record_drop(self, worker: int, t: float) -> None:
+        self.dropped_at[worker] = t
+
+    # ------------------------------------------------------------- queries --
+    def tx_fields(self) -> dict[str, np.ndarray]:
+        if self._fields_cache is not None \
+                and self._fields_cache[0] == len(self.tx):
+            return self._fields_cache[1]
+        cols = list(zip(*((r.t, r.src, r.dst, r.bits, r.energy_j,
+                           r.airtime_s, r.attempt, r.rnd)
+                          for r in self.tx))) or [[]] * len(_TX_FIELDS)
+        ints = {"src", "dst", "attempt", "rnd"}
+        f = {k: np.asarray(c, np.int64 if k in ints else float)
+             for k, c in zip(_TX_FIELDS, cols)}
+        self._fields_cache = (len(self.tx), f)
+        return f
+
+    def makespan_s(self) -> float:
+        ends = [d[-1] for d in self.round_done if d]
+        return max(ends) if ends else 0.0
+
+    def rounds_completed(self) -> list[int]:
+        return [len(d) for d in self.round_done]
+
+    def global_round_times(self) -> list[float]:
+        alive = [w for w in range(self.n) if w not in self.dropped_at]
+        counted = alive if alive else range(self.n)
+        k_max = min((len(self.round_done[w]) for w in counted), default=0)
+        return [max(self.round_done[w][k] for w in counted)
+                for k in range(k_max)]
+
+
+class ArrayTimeline(TimelineBase):
+    """Array-backed accountant for the vectorized engine (sim.vectorized).
+
+    Same query API as :class:`Timeline`, but backed by flat numpy arrays
+    instead of one Python TxRecord per message — the number of Python
+    objects is O(1) in N and in the transmission count.  The vectorized
+    engine has no link-layer drops (membership changes are participation
+    schedules), so ``dropped_at`` is always empty; snapshots, when
+    recorded, live on the runner side.
+    """
+
+    def __init__(self, n: int, round_done: np.ndarray, tx_t: np.ndarray,
+                 tx_src: np.ndarray, tx_bits: np.ndarray,
+                 tx_energy: np.ndarray, tx_attempt: np.ndarray, *,
+                 tx_dst: np.ndarray | None = None,
+                 tx_rnd: np.ndarray | None = None,
+                 airtime_s: float = 0.0) -> None:
+        self.n = int(n)
+        self.round_done_arr = np.asarray(round_done, float)  # (rounds, N)
+        self.tx_t = np.asarray(tx_t, float)
+        self.tx_src = np.asarray(tx_src, np.int64)
+        self.tx_bits = np.asarray(tx_bits, float)
+        self.tx_energy = np.asarray(tx_energy, float)
+        self.tx_attempt = np.asarray(tx_attempt, np.int64)
+        m = len(self.tx_t)
+        self.tx_dst = (np.asarray(tx_dst, np.int64) if tx_dst is not None
+                       else np.full(m, -1, np.int64))
+        self.tx_rnd = (np.asarray(tx_rnd, np.int64) if tx_rnd is not None
+                       else np.full(m, -1, np.int64))
+        self.airtime_s = float(airtime_s)
+        self.dropped_at: dict[int, float] = {}
+
+    # ------------------------------------------------------------- queries --
+    def tx_fields(self) -> dict[str, np.ndarray]:
+        return {"t": self.tx_t, "src": self.tx_src, "dst": self.tx_dst,
+                "bits": self.tx_bits, "energy_j": self.tx_energy,
+                "airtime_s": np.full(len(self.tx_t), self.airtime_s),
+                "attempt": self.tx_attempt, "rnd": self.tx_rnd}
+
+    def makespan_s(self) -> float:
+        if not self.round_done_arr.size:
+            return 0.0
+        return float(self.round_done_arr[-1].max())
+
+    def rounds_completed(self) -> list[int]:
+        return [int(self.round_done_arr.shape[0])] * self.n
+
+    def global_round_times(self) -> list[float]:
+        if not self.round_done_arr.size:
+            return []
+        return self.round_done_arr.max(axis=1).tolist()

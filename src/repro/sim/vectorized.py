@@ -128,13 +128,18 @@ def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
     radio_busy = np.zeros(n)
     t_done = np.zeros(n)
     tx_t, tx_src, tx_bits, tx_e, tx_att = [], [], [], [], []
+    tx_dst, tx_rnd = [], []
+    cur_round = [0]     # mutable holder: the round loop advances it
 
-    def _record(t, srcs, b, dist, attempt):
+    def _record(t, srcs, b, dist, attempt, dst=None):
         tx_t.append(t)
         tx_src.append(srcs)
         tx_bits.append(b)
         tx_e.append(tx_energy(b, dist, bw[srcs], slot, radio.noise_psd))
         tx_att.append(attempt)
+        tx_dst.append(np.full(len(srcs), -1, np.int64) if dst is None
+                      else np.asarray(dst, np.int64))
+        tx_rnd.append(np.full(len(srcs), cur_round[0], np.int64))
 
     def _spread(reps):
         """0..reps[i]-1 counters, flattened per segment."""
@@ -175,7 +180,8 @@ def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
                 srcs = psrc[late][flat]
                 _record(base[flat] + intra * slot, srcs, bits_w[srcs],
                         ph["dist"][late][flat],
-                        (intra + 1).astype(np.int64))
+                        (intra + 1).astype(np.int64),
+                        dst=ph["dst"][late][flat])
         else:
             a_eff = np.where(sel, att, 0)
             cum = _gcumsum(a_eff.astype(float) * slot, ph)
@@ -188,7 +194,8 @@ def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
                 flat, intra = _spread(reps)
                 srcs = psrc[act][flat]
                 _record(base[flat] + intra * slot, srcs, bits_w[srcs],
-                        ph["dist"][act][flat], intra.astype(np.int64))
+                        ph["dist"][act][flat], intra.astype(np.int64),
+                        dst=ph["dst"][act][flat])
         arr = np.maximum(ready + ncfg.latency_s + jit, fifo[ph["idx"]])
         fifo[ph["idx"]] = np.where(sel, arr, fifo[ph["idx"]])
         last_arr[ph["idx"]] = np.where(sel, arr, last_arr[ph["idx"]])
@@ -212,6 +219,7 @@ def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
     objs: list[float] = []
 
     for k in range(rounds):
+        cur_round[0] = k
         part_k = np.ones(n, bool) if part is None else part[k]
         pres_h = head & part_k
         pres_t = ~head & part_k
@@ -261,7 +269,9 @@ def simulate_vectorized(xs, ys, gcfg: gadmm.GADMMConfig, scfg,
 
     timeline = ArrayTimeline(
         n, round_done, _cat(tx_t, float), _cat(tx_src, np.int64),
-        _cat(tx_bits, float), _cat(tx_e, float), _cat(tx_att, np.int64))
+        _cat(tx_bits, float), _cat(tx_e, float), _cat(tx_att, np.int64),
+        tx_dst=_cat(tx_dst, np.int64), tx_rnd=_cat(tx_rnd, np.int64),
+        airtime_s=slot)
     fstar = _graph_fstar(q, xs, ys, d)
     losses = np.asarray([abs(o - fstar) for o in objs])
     return SimResult(topo=topo, timeline=timeline, states=states,
